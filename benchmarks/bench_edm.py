@@ -1,0 +1,75 @@
+"""Paper Fig. 5 reproduction: EDM with d = 1..4 features, LTM vs BB.
+
+Both strategies run as compiled XLA scans over their block enumeration
+(LTM: T = n(n+1)/2 steps; BB: n^2 steps with the paper's block-coordinate
+guard), so the CPU wall-clock ratio isolates exactly what the paper's GPU
+experiment isolates — the cost of the wasted space of computation — without
+GPU-specific effects. Numerics are validated against the O(N^2) oracle.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.tri_edm import ops as E
+from repro.kernels.tri_edm import ref as R
+
+BLOCK = 64
+
+
+def _time(fn, reps: int = 3):
+    fn()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(n_values=(1024, 2048, 4096), features=(1, 2, 3, 4),
+        out_path=None) -> list:
+    rows = []
+    key = jax.random.key(0)
+    ltm = jax.jit(lambda x: E.edm(x, BLOCK, impl="scan"))
+    bb = jax.jit(lambda x: E.edm(x, BLOCK, impl="bb_scan"))
+    for n_pts in n_values:
+        for d in features:
+            x = jax.random.normal(key, (n_pts, d), jnp.float32)
+            t_ltm = _time(lambda: ltm(x))
+            t_bb = _time(lambda: bb(x))
+            # numerics vs oracle (small N only to bound the O(N^2) ref)
+            err = None
+            if n_pts <= 2048:
+                packed = ltm(x)
+                full = E.unpack_tri(np.asarray(packed), n_pts)
+                ref = R.edm_full(x)
+                err = float(jnp.max(jnp.abs(
+                    jnp.tril(full) - jnp.tril(ref))))
+            rows.append({
+                "N": n_pts, "features": d,
+                "t_ltm_ms": t_ltm * 1e3, "t_bb_ms": t_bb * 1e3,
+                "I": t_bb / t_ltm, "max_err_vs_oracle": err,
+            })
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+def main():
+    rows = run(out_path="artifacts/bench_edm.json")
+    print(f"{'N':>6} {'d':>2} {'ltm ms':>9} {'bb ms':>9} {'I':>6}  err")
+    for r in rows:
+        print(f"{r['N']:6d} {r['features']:2d} {r['t_ltm_ms']:9.2f} "
+              f"{r['t_bb_ms']:9.2f} {r['I']:6.3f}  "
+              f"{r['max_err_vs_oracle']}")
+
+
+if __name__ == "__main__":
+    main()

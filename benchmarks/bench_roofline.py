@@ -1,0 +1,83 @@
+"""Roofline table generator: reads artifacts/dryrun/*.json -> markdown.
+
+One row per (arch x shape x mesh) cell with the three terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs, and the per-device memory footprint.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(dryrun_dir: str = "artifacts/dryrun"):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f} GiB"
+
+
+def table(recs, mesh: str = "single", tag: str = "") -> str:
+    lines = [
+        "| arch | shape | compute_s | memory_s | mem(adj)_s | "
+        "collective_s | dominant(adj) | useful | MFU@bound(adj) | mem/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("mesh") != mesh or r.get("tag", "") != tag:
+            continue
+        if not r.get("supported", True):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                         f"skipped | — | — | — |")
+            continue
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                         f"FAILED: {r.get('error','')[:40]} | — | — | — |")
+            continue
+        rf = r["roofline"]
+        mem = r["analysis"]["memory"]["peak_bytes_per_device"]
+        madj = rf.get("memory_kernel_adj_s", rf["memory_s"])
+        mfua = rf.get("mfu_at_bound_kernel_adj", rf["mfu_at_bound"])
+        dom = rf.get("dominant_kernel_adj", rf["dominant"])
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.4f} | "
+            f"{rf['memory_s']:.4f} | {madj:.4f} | "
+            f"{rf['collective_s']:.4f} | "
+            f"**{dom}** | {rf['useful_flops_ratio']:.2f} | "
+            f"{mfua:.4f} | {fmt_bytes(mem)} |")
+    return "\n".join(lines)
+
+
+def summary(recs, tag=None) -> dict:
+    out = {"total": 0, "ok": 0, "skipped": 0, "failed": 0}
+    for r in recs:
+        if tag is not None and r.get("tag", "") != tag:
+            continue
+        out["total"] += 1
+        if not r.get("supported", True):
+            out["skipped"] += 1
+        elif r.get("ok"):
+            out["ok"] += 1
+        else:
+            out["failed"] += 1
+    return out
+
+
+def main():
+    import sys
+    tag = sys.argv[1] if len(sys.argv) > 1 else ""
+    recs = load()
+    print("baseline:", summary(recs, ""), " optimized:", summary(recs, "opt"))
+    for mesh in ("single", "multi"):
+        print(f"\n### mesh={mesh} tag={tag or 'baseline'}\n")
+        print(table(recs, mesh, tag))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Benchmark harness entry point: one benchmark per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+
+  bench_mapping   — paper Fig. 3 (dummy kernel / strategy cost + waste)
+  bench_edm       — paper Fig. 5 (EDM, d = 1..4 features, LTM vs BB)
+  bench_attention — the technique on causal flash attention (tiles/FLOPs/I)
+  bench_roofline  — §Roofline table from the dry-run artifacts (if present)
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller N ranges (CI-sized)")
+    args = ap.parse_args(argv)
+    os.makedirs("artifacts", exist_ok=True)
+
+    from benchmarks import bench_mapping, bench_edm, bench_attention, \
+        bench_roofline
+
+    t0 = time.time()
+    print("=" * 72)
+    print("bench_mapping (paper Fig. 3)")
+    print("=" * 72)
+    rows = bench_mapping.run(
+        n_values=[64, 256, 1024] if args.fast else None,
+        out_path="artifacts/bench_mapping.json")
+    for r in rows:
+        ii = r["improvement_I_vs_bb"]
+        print(f"  N={r['N']:6d} I(ltm)={ii['ltm']:.3f} I(rb)={ii['rb']:.3f} "
+              f"I(utm)={ii['utm']:.3f} wasted bb={r['blocks']['bb']['wasted']}"
+              f" ltm={r['blocks']['ltm']['wasted']}")
+    print("  LTM-R exactness:", bench_mapping.exactness_check(
+        1024 if args.fast else 4096))
+
+    print("=" * 72)
+    print("bench_edm (paper Fig. 5)")
+    print("=" * 72)
+    rows = bench_edm.run(
+        n_values=(1024,) if args.fast else (1024, 2048, 4096),
+        features=(1, 4) if args.fast else (1, 2, 3, 4),
+        out_path="artifacts/bench_edm.json")
+    for r in rows:
+        print(f"  N={r['N']:6d} d={r['features']} I={r['I']:.3f} "
+              f"ltm={r['t_ltm_ms']:.1f}ms bb={r['t_bb_ms']:.1f}ms "
+              f"err={r['max_err_vs_oracle']}")
+
+    print("=" * 72)
+    print("bench_attention (LTM flash attention vs BB)")
+    print("=" * 72)
+    rows = bench_attention.run(
+        seqs=(512,) if args.fast else (1024, 2048),
+        block=128, out_path="artifacts/bench_attention.json")
+    for r in rows:
+        print(f"  seq={r['seq']:5d} tiles={r['tiles_ltm']}/{r['tiles_bb']} "
+              f"I_wall={r['I_wallclock']:.3f} I_flops={r['I_flops']:.3f}")
+
+    print("=" * 72)
+    print("bench_roofline (dry-run artifacts)")
+    print("=" * 72)
+    recs = bench_roofline.load()
+    if recs:
+        print(" ", bench_roofline.summary(recs))
+    else:
+        print("  no dry-run artifacts yet "
+              "(run: python -m repro.launch.dryrun --all --mesh both)")
+    print(f"\nall benchmarks done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""The paper's own benchmark problem: Euclidean distance matrix over the
+lower-triangular domain, scheduled by g(lambda).
+
+Shows: packed output (half the memory), exactness vs the O(N^2) oracle,
+and the launched-block accounting vs the bounding-box strategy.
+
+  PYTHONPATH=src python examples/edm_pairwise.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import analysis as A
+from repro.core import mapping as M
+from repro.kernels.tri_edm import ops as E
+from repro.kernels.tri_edm import ref as R
+
+N, D, BLOCK = 1024, 3, 64
+
+
+def main():
+    x = jax.random.normal(jax.random.key(7), (N, D), jnp.float32)
+    n = N // BLOCK
+
+    # packed LTM EDM (Pallas kernel in interpret mode — TPU tiling semantics)
+    packed = E.edm(x, BLOCK, impl="pallas", interpret=True)
+    print(f"packed output: {packed.shape} = T(n={n}) x {BLOCK} x {BLOCK} "
+          f"({packed.nbytes/2**20:.1f} MiB vs full "
+          f"{N*N*4/2**20:.1f} MiB)")
+
+    # exactness vs oracle
+    full = E.unpack_tri(np.asarray(packed), N)
+    ref = R.edm_full(x)
+    err = float(jnp.max(jnp.abs(jnp.tril(full) - jnp.tril(ref))))
+    print(f"max |err| vs O(N^2) oracle: {err:.2e}")
+    assert err < 1e-4
+
+    # the paper's block accounting
+    stats = A.strategy_stats(n)
+    for k in ("bb", "ltm", "rb", "utm"):
+        s = stats[k]
+        print(f"  {k:4s} launched={s.launched:5d} wasted={s.wasted:5d} "
+              f"block-ratio vs BB={s.block_ratio_vs_bb:.3f}")
+    lam = M.tri(n) - 1
+    print(f"g({lam}) = {M.ltm_map(lam)}  (last block -> row n-1, col n-1)")
+    print("edm_pairwise OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Quickstart: train a small LM with LTM-scheduled attention, checkpoint,
+restore, and generate — the whole public API in one script.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry as REG
+from repro.configs.base import ShapeConfig
+from repro.models import model as MD
+from repro.serve import decode as D
+from repro.train import checkpoint as CKPT
+from repro.train import data as DATA
+from repro.train import optimizer as OPT
+from repro.train import train_step as TS
+
+
+def main():
+    # 1. a reduced Yi-9B-family config (GQA llama-arch, LTM attention)
+    cfg = REG.smoke_config("yi-9b")
+    print(f"arch {cfg.name}: {cfg.n_layers}L d={cfg.d_model} "
+          f"heads={cfg.n_heads}/{cfg.n_kv_heads} vocab={cfg.vocab_size}")
+
+    # 2. train 30 steps on the synthetic pipeline
+    opt = OPT.OptConfig(lr=3e-3, warmup_steps=5, total_steps=30)
+    state = TS.init_state(jax.random.key(0), cfg, opt)
+    shape = ShapeConfig("quickstart", seq_len=128, global_batch=8,
+                        kind="train")
+    ds = DATA.SyntheticLM(cfg, shape, seed=0, act_dtype=jnp.float32)
+    step = jax.jit(TS.make_train_step(cfg, opt), donate_argnums=(0,))
+    first = last = None
+    for i in range(30):
+        state, metrics = step(state, ds.batch(i))
+        if i == 0:
+            first = float(metrics["loss"])
+        last = float(metrics["loss"])
+        if i % 10 == 0:
+            print(f"  step {i:3d} loss {float(metrics['loss']):.4f}")
+    print(f"loss {first:.3f} -> {last:.3f}")
+    assert last < first, "training must reduce loss"
+
+    # 3. checkpoint round-trip
+    with tempfile.TemporaryDirectory() as d:
+        CKPT.save(d, state, int(state.step))
+        target = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+        restored, _ = CKPT.restore(d, target)
+        print(f"checkpoint round-trip ok (step {int(restored.step)})")
+
+    # 4. greedy generation from the trained params
+    cache = MD.init_cache(cfg, 2, 64, jnp.float32)
+    toks, cache, pos = D.generate(
+        state.params, cfg, cache,
+        first_tokens=jnp.array([[1], [2]], jnp.int32),
+        start_pos=jnp.zeros((2,), jnp.int32), n_tokens=12)
+    print("generated:", toks.tolist())
+    print("quickstart OK")
+
+
+if __name__ == "__main__":
+    main()

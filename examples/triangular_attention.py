@@ -1,0 +1,57 @@
+"""Direct use of the triangular-domain attention kernels: causal (LTM),
+sliding-window (BandSchedule) and VLM prefix-causal (PrefixSchedule),
+validated against the dense oracle, plus the tile accounting for each
+domain shape.
+
+  PYTHONPATH=src python examples/triangular_attention.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mapping as M
+from repro.kernels.tri_attn import ops as AO
+from repro.kernels.tri_attn import ref as AR
+
+B, H, HKV, S, DH, BLK = 2, 8, 2, 512, 64, 128
+
+
+def main():
+    key = jax.random.key(0)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, H, S, DH), jnp.float32)
+    k = jax.random.normal(kk, (B, HKV, S, DH), jnp.float32)
+    v = jax.random.normal(kv, (B, HKV, S, DH), jnp.float32)
+    n = S // BLK
+
+    cases = {
+        "causal (LTM)": dict(window=None, prefix=0,
+                             tiles=M.tri(n)),
+        "sliding-window 128 (Band)": dict(window=128, prefix=0,
+                                          tiles=M.band_blocks(n, 2)),
+        "prefix-causal 128 (Prefix, VLM)": dict(window=None, prefix=128,
+                                                tiles=M.prefix_full_blocks(
+                                                    n, 1)),
+    }
+    for name, c in cases.items():
+        for impl in ("scan", "pallas"):
+            out = AO.triangular_attention(
+                q, k, v, window=c["window"], prefix=c["prefix"], impl=impl,
+                block_q=BLK, block_k=BLK, interpret=True)
+            ref = AR.mha_reference(q, k, v, window=c["window"],
+                                   prefix=c["prefix"])
+            err = float(jnp.max(jnp.abs(out - ref)))
+            assert err < 2e-3, (name, impl, err)
+        print(f"{name:34s} tiles={c['tiles']:3d} (BB grid: {n*n}) "
+              f"max|err|={err:.1e}  [scan+pallas vs oracle OK]")
+
+    # gradients flow through the custom VJP (scan path)
+    f = lambda q: AO.triangular_attention(q, k, v, impl="scan",
+                                          block_q=BLK, block_k=BLK).sum()
+    g = jax.grad(f)(q)
+    print(f"dq norm through custom VJP: {float(jnp.linalg.norm(g)):.3f}")
+    print("triangular_attention OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,215 @@
+"""Configuration schema: architectures, input shapes, reduced smoke configs."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One architecture. Layer kinds: 'attn' (transformer block), 'mamba',
+    'rwkv'. layer_pattern is tiled to n_layers."""
+
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+
+    # MoE (0 experts -> dense MLP everywhere)
+    n_experts: int = 0
+    experts_per_token: int = 0
+    moe_every: int = 1  # MoE on layers where (idx % moe_every == moe_offset)
+    moe_offset: int = 0
+    capacity_factor: float = 1.25
+
+    # attention
+    sliding_window: Optional[int] = None
+    rope_theta: float = 10_000.0
+    mlp_activation: str = "swiglu"  # swiglu | relu2 | gelu
+    layer_pattern: Tuple[str, ...] = ("attn",)
+
+    # SSM dims (mamba)
+    d_state: int = 16
+    d_conv: int = 4
+    ssm_expand: int = 2
+
+    # rwkv
+    rwkv_head_dim: int = 64
+    rwkv_lora_dim: int = 64
+
+    # modality frontend stub: 'none' | 'audio_frames' | 'vision_patches'
+    frontend: str = "none"
+    n_patches: int = 0  # vlm: visual prefix length (precomputed embeddings)
+
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+    tie_embeddings: bool = False
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    # ---- derived -----------------------------------------------------------
+    @property
+    def layer_kinds(self) -> Tuple[str, ...]:
+        reps = -(-self.n_layers // len(self.layer_pattern))
+        return (self.layer_pattern * reps)[: self.n_layers]
+
+    @property
+    def superlayer(self) -> int:
+        """Layers per scan step (== len(layer_pattern) when mixed)."""
+        return len(self.layer_pattern)
+
+    @property
+    def n_superlayers(self) -> int:
+        assert self.n_layers % self.superlayer == 0
+        return self.n_layers // self.superlayer
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded for clean TP sharding + MXU lane alignment."""
+        return _round_up(self.vocab_size, 256)
+
+    @property
+    def d_inner(self) -> int:  # mamba
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_rwkv_heads(self) -> int:
+        return self.d_model // self.rwkv_head_dim
+
+    def is_moe_layer(self, idx: int) -> bool:
+        if self.n_experts == 0:
+            return False
+        return idx % self.moe_every == self.moe_offset
+
+    def is_pure_full_attention(self) -> bool:
+        """True if every token-mixing layer is unwindowed full attention
+        (-> quadratic; long_500k is skipped per the brief)."""
+        return (all(k == "attn" for k in self.layer_kinds)
+                and self.sliding_window is None)
+
+    # ---- parameter counting (for roofline MODEL_FLOPS = 6*N*D) -------------
+    def param_counts(self) -> dict:
+        d, hd = self.d_model, self.head_dim
+        qkvo = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd \
+            + self.n_heads * hd * d
+        if self.mlp_activation == "swiglu":
+            mlp = 3 * d * self.d_ff
+        else:
+            mlp = 2 * d * self.d_ff
+        total = 0
+        active = 0
+        for idx, kind in enumerate(self.layer_kinds):
+            if kind == "attn":
+                total += qkvo
+                active += qkvo
+            elif kind == "mamba":
+                din, ds = self.d_inner, self.d_state
+                m = (d * 2 * din          # in_proj (x, z)
+                     + din * self.d_conv  # depthwise conv
+                     + din * (ds * 2 + 1) # x_proj -> B, C, dt(rank1 simplif.)
+                     + din                # dt bias / A diag handled below
+                     + din * ds           # A_log
+                     + din                # D
+                     + din * d)           # out_proj
+                total += m
+                active += m
+            elif kind == "rwkv":
+                h = self.n_rwkv_heads
+                m = 4 * d * d + d * d  # r,k,v,g,out projections (approx wkv6)
+                m += 2 * self.rwkv_lora_dim * d + h * self.rwkv_head_dim
+                total += m
+                active += m
+            if kind in ("attn", "mamba", "rwkv"):
+                if self.is_moe_layer(idx):
+                    total += self.n_experts * mlp + d * self.n_experts
+                    active += self.experts_per_token * mlp + d * self.n_experts
+                elif kind == "rwkv":
+                    cm = 2 * d * self.d_ff + d * d  # channel mix k, v, r
+                    total += cm
+                    active += cm
+                else:
+                    total += mlp
+                    active += mlp
+            total += 2 * d  # norms
+            active += 2 * d
+        emb = self.padded_vocab * d
+        head = 0 if self.tie_embeddings else self.padded_vocab * d
+        total += emb + head + d
+        active += emb + head + d
+        return {"total": total, "active": active}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One input-shape cell (paired with an architecture)."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode | long_decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind in ("decode", "long_decode")
+
+    @property
+    def tokens_per_step(self) -> int:
+        if self.is_decode:
+            return self.global_batch  # one new token per sequence
+        return self.seq_len * self.global_batch
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "long_decode"),
+}
+
+
+def reduced(cfg: ModelConfig, *, layers: Optional[int] = None) -> ModelConfig:
+    """Smoke-test config: same family/topology, tiny dims."""
+    sl = cfg.superlayer
+    n_layers = layers if layers is not None else 2 * sl
+    n_layers = _round_up(n_layers, sl)
+    heads = min(cfg.n_heads, 4)
+    kv = max(1, min(cfg.n_kv_heads, heads))
+    while heads % kv:
+        kv -= 1
+    hd = 16
+    d_model = heads * hd * 2  # keep d_model a multiple of rwkv head dim
+    return dataclasses.replace(
+        cfg,
+        n_layers=n_layers,
+        d_model=d_model,
+        n_heads=heads,
+        n_kv_heads=kv,
+        head_dim=hd,
+        d_ff=4 * d_model if cfg.n_experts == 0 else 64,
+        vocab_size=512,
+        n_experts=min(cfg.n_experts, 4) if cfg.n_experts else 0,
+        experts_per_token=(min(cfg.experts_per_token, 2)
+                           if cfg.n_experts else 0),
+        # no capacity drops at smoke scale: keeps batched-forward ==
+        # incremental-decode exactly testable (full scale keeps 1.25)
+        capacity_factor=8.0,
+        sliding_window=(64 if cfg.sliding_window is not None else None),
+        d_state=8,
+        rwkv_head_dim=16,
+        rwkv_lora_dim=8,
+        n_patches=8 if cfg.n_patches else 0,
+        dtype="float32",
+    )

@@ -1,0 +1,24 @@
+"""granite-moe-3b-a800m [moe] — 40 experts top-8 (brief's structured field;
+its free text says 32e — discrepancy noted in DESIGN.md §6), GQA kv=8.
+
+[hf:ibm-granite/granite-3.0-3b-a800m-base]
+32L d_model=1536 24H (GQA kv=8) d_ff=512 (per-expert) vocab=49155.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    n_layers=32,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=512,
+    vocab_size=49155,
+    n_experts=40,
+    experts_per_token=8,
+    moe_every=1,
+    mlp_activation="swiglu",
+    layer_pattern=("attn",),
+)

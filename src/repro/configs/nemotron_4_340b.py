@@ -1,0 +1,21 @@
+"""nemotron-4-340b [dense] — GQA, squared-ReLU MLP, 256k vocab.
+
+[arXiv:2402.16819 (Nemotron-4 15B report; 340B scales it)]
+96L d_model=18432 96H (GQA kv=8) d_ff=73728 vocab=256000.
+head_dim = 192 (pads MXU lanes to 256 — noted in roofline analysis).
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-340b",
+    family="dense",
+    n_layers=96,
+    d_model=18432,
+    n_heads=96,
+    n_kv_heads=8,
+    d_ff=73728,
+    vocab_size=256000,
+    mlp_activation="relu2",
+    layer_pattern=("attn",),
+)

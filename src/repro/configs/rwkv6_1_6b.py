@@ -1,0 +1,24 @@
+"""rwkv6-1.6b [ssm] — Finch, data-dependent decay; attention-free.
+
+[arXiv:2404.05892] 24L d_model=2048 d_ff=7168 vocab=65536.
+The paper's triangular mapping is inapplicable to the token mixer (no
+attention); the chunked WKV6 intra-chunk decay matrix is itself a strictly
+lower-triangular domain — see DESIGN.md §6. n_heads below is the WKV head
+count (d_model / 64).
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b",
+    family="ssm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=32,       # wkv heads (= d_model / rwkv_head_dim)
+    n_kv_heads=32,
+    d_ff=7168,
+    vocab_size=65536,
+    layer_pattern=("rwkv",),
+    rwkv_head_dim=64,
+    rwkv_lora_dim=64,
+)

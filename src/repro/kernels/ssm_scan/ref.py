@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the fused selective scan (Mamba-1 recurrence).
+
+    h_t = exp(dt_t * A) * h_{t-1} + (dt_t * x_t) * B_t
+    y_t = C_t . h_t
+
+Shapes: x, dt (B, L, D); A (D, N); Bt, Ct (B, L, N); h0 (B, D, N).
+Returns (y (B, L, D), h_L (B, D, N)). All math in f32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(x, dt, A, Bt, Ct, h0=None):
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    A = A.astype(jnp.float32)
+    Bt = Bt.astype(jnp.float32)
+    Ct = Ct.astype(jnp.float32)
+    b, l, d = x.shape
+    n = A.shape[1]
+    h = (jnp.zeros((b, d, n), jnp.float32) if h0 is None
+         else h0.astype(jnp.float32))
+
+    def step(h, args):
+        xt, dtt, bt, ct = args
+        decay = jnp.exp(dtt[..., None] * A)          # (B, D, N)
+        h = decay * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    sw = lambda t: t.swapaxes(0, 1)
+    h_end, ys = jax.lax.scan(step, h, (sw(x), sw(dt), sw(Bt), sw(Ct)))
+    return sw(ys), h_end

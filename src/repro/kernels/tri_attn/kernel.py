@@ -1,0 +1,429 @@
+"""Pallas TPU kernels: flash attention over triangular-domain 1-D grids.
+
+The paper's g(lambda) becomes the BlockSpec index_map: the forward (and dq
+backward) iterate a 1-D grid of T = tri(n) steps enumerated ROW-major (the
+LTM order), the dk/dv backward iterates COLUMN-major (cm_map) so per-column
+accumulators stay resident in VMEM scratch. Wasted tiles: zero off-diagonal
+(vs. the BB baseline's n(n-1)/2), only intra-tile masking on boundary tiles
+remains — exactly the paper's O(n^2) -> O(n) claim at tile granularity.
+
+Schedules: 'ltm' (causal), 'band' (sliding window, beyond-paper), 'prefix'
+(VLM prefix-causal, beyond-paper). 'bb' is the paper's bounding-box baseline
+(2-D grid + block-level guard).
+
+All kernels accumulate in f32 VMEM scratch and are validated in interpret
+mode against ref.py (tests/test_kernels_tri_attn.py). TPU notes: block_q and
+block_k should be multiples of 128 (MXU); head_dim 64/128/192 all lower (192
+pads lanes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import mapping as M
+
+MASK_VALUE = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# ---------------------------------------------------------------------------
+# Schedule parameterization shared by fwd / dq / dkv kernels
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TriSched:
+    """Static schedule metadata for one attention call (bq == bk required
+    for triangular/band kinds so the tile domain is square)."""
+
+    kind: str  # 'ltm' | 'band' | 'prefix'
+    n: int  # tiles per side
+    bq: int
+    bk: int
+    window: Optional[int] = None  # tokens (band)
+    prefix: int = 0  # tokens (prefix)
+
+    def __post_init__(self):
+        assert self.kind in ("ltm", "band", "prefix")
+        if self.kind == "band":
+            assert self.window is not None and self.window >= 1
+            assert self.bq == self.bk
+
+    @property
+    def w_b(self) -> int:
+        """Band width in tiles: tile j needed iff exists q,k in tiles with
+        0 <= q-k < window  =>  j >= i - ((window-2)//bk + 1)."""
+        if self.window is None:
+            return self.n
+        return min((self.window - 2) // self.bk + 2, self.n)
+
+    @property
+    def p_b(self) -> int:
+        return -(-self.prefix // self.bk) if self.prefix else 0
+
+    # ---- row-major enumeration (forward, dq) -----------------------------
+    @property
+    def rm_steps(self) -> int:
+        if self.kind == "ltm":
+            return M.tri(self.n)
+        if self.kind == "band":
+            return M.band_blocks(self.n, self.w_b)
+        return M.prefix_full_blocks(self.n, self.p_b)
+
+    def rm_map(self, lam):
+        if self.kind == "ltm":
+            return M.ltm_map(lam)
+        if self.kind == "band":
+            return M.band_map(lam, self.w_b)
+        return M.prefix_full_map(lam, self.n, self.p_b)
+
+    def rm_first_col(self, i):
+        if self.kind == "band":
+            return jnp.maximum(0, i - self.w_b + 1)
+        return i * 0
+
+    def rm_last_col(self, i):
+        if self.kind == "prefix":
+            return jnp.maximum(i, self.p_b - 1)
+        return i
+
+    # ---- column-major enumeration (dk/dv) --------------------------------
+    @property
+    def cm_steps(self) -> int:
+        return self.rm_steps  # same domain, different order
+
+    def cm_map(self, lam):
+        if self.kind == "ltm":
+            return M.cm_map(lam, self.n)
+        if self.kind == "band":
+            return M.band_cm_map(lam, self.n, self.w_b)
+        return M.prefix_cm_map(lam, self.n, self.p_b)
+
+    def cm_first_row(self, j):
+        if self.kind == "prefix":
+            return jnp.where(j < self.p_b, 0, j)
+        return j
+
+    def cm_last_row(self, j):
+        if self.kind == "band":
+            return jnp.minimum(j + self.w_b - 1, self.n - 1)
+        return jnp.full_like(j, self.n - 1) if not isinstance(j, int) else self.n - 1
+
+
+def _token_mask(sched: TriSched, i, j, bq, bk):
+    """(bq, bk) boolean mask for tile (i, j): True = attend."""
+    qp = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kp = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    m = kp <= qp
+    if sched.window is not None:
+        m &= (qp - kp) < sched.window
+    if sched.prefix:
+        m |= kp < sched.prefix
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_s, l_s, acc_s, *,
+                sched: TriSched, scale: float):
+    lam = pl.program_id(2)
+    i, j = sched.rm_map(lam)
+
+    @pl.when(j == sched.rm_first_col(i))
+    def _init():
+        m_s[...] = jnp.full_like(m_s, MASK_VALUE)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(_token_mask(sched, i, j, sched.bq, sched.bk), s, MASK_VALUE)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_s[...] = l_s[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_s[...] = acc_s[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(j == sched.rm_last_col(i))
+    def _emit():
+        l = l_s[...]
+        o_ref[0, 0] = (acc_s[...] / l).astype(o_ref.dtype)
+        lse_ref[0, 0] = (m_s[...] + jnp.log(l))[:, 0].astype(lse_ref.dtype)
+
+
+def fwd(q, k, v, sched: TriSched, *, sm_scale=None, interpret=True):
+    """q: (B, H, S, D); k, v: (B, Hkv, S, D). Returns (out, lse)."""
+    b, h, s_len, d = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+    bq, bk, n = sched.bq, sched.bk, sched.n
+    assert n * bq == s_len and n * bk == s_len
+
+    grid = (b, h, sched.rm_steps)
+    rm_i = lambda lam: sched.rm_map(lam)[0]
+    rm_j = lambda lam: sched.rm_map(lam)[1]
+    kernel = functools.partial(_fwd_kernel, sched=sched, scale=scale)
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, lam: (b_, h_, rm_i(lam), 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, lam: (b_, h_ // g, rm_j(lam), 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, lam: (b_, h_ // g, rm_j(lam), 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, lam: (b_, h_, rm_i(lam), 0)),
+            pl.BlockSpec((1, 1, bq), lambda b_, h_, lam: (b_, h_, rm_i(lam))),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(q.shape, q.dtype),
+            jax.ShapeDtypeStruct((b, h, s_len), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out, lse
+
+
+# ---------------------------------------------------------------------------
+# Backward: dq (row-major grid, same enumeration as forward)
+# ---------------------------------------------------------------------------
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+               dq_s, *, sched: TriSched, scale: float):
+    lam = pl.program_id(2)
+    i, j = sched.rm_map(lam)
+
+    @pl.when(j == sched.rm_first_col(i))
+    def _init():
+        dq_s[...] = jnp.zeros_like(dq_s)
+
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0].astype(jnp.float32)[:, None]
+    delta = delta_ref[0, 0].astype(jnp.float32)[:, None]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(_token_mask(sched, i, j, sched.bq, sched.bk), s, MASK_VALUE)
+    p = jnp.exp(s - lse)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta) * scale
+    dq_s[...] += jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+
+    @pl.when(j == sched.rm_last_col(i))
+    def _emit():
+        dq_ref[0, 0] = dq_s[...].astype(dq_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Backward: dk/dv (column-major grid; per-q-head partials, group-summed in
+# ops.py — output revisiting cannot accumulate across kv-head groups)
+# ---------------------------------------------------------------------------
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                dk_ref, dv_ref, dk_s, dv_s, *, sched: TriSched, scale: float):
+    lam = pl.program_id(2)
+    i, j = sched.cm_map(lam)
+
+    @pl.when(i == sched.cm_first_row(j))
+    def _init():
+        dk_s[...] = jnp.zeros_like(dk_s)
+        dv_s[...] = jnp.zeros_like(dv_s)
+
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0].astype(jnp.float32)[:, None]
+    delta = delta_ref[0, 0].astype(jnp.float32)[:, None]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(_token_mask(sched, i, j, sched.bq, sched.bk), s, MASK_VALUE)
+    p = jnp.exp(s - lse)  # (bq, bk)
+    dv_s[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta) * scale
+    dk_s[...] += jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+
+    @pl.when(i == sched.cm_last_row(j))
+    def _emit():
+        dk_ref[0, 0] = dk_s[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_s[...].astype(dv_ref.dtype)
+
+
+def bwd(q, k, v, out, lse, do, sched: TriSched, *, sm_scale=None,
+        interpret=True):
+    """Returns (dq, dk, dv) with dk/dv shaped like k/v (group-summed)."""
+    b, h, s_len, d = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+    bq, bk = sched.bq, sched.bk
+    delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+
+    rm_i = lambda lam: sched.rm_map(lam)[0]
+    rm_j = lambda lam: sched.rm_map(lam)[1]
+    grid = (b, h, sched.rm_steps)
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, sched=sched, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, lam: (b_, h_, rm_i(lam), 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, lam: (b_, h_ // g, rm_j(lam), 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, lam: (b_, h_ // g, rm_j(lam), 0)),
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, lam: (b_, h_, rm_i(lam), 0)),
+            pl.BlockSpec((1, 1, bq), lambda b_, h_, lam: (b_, h_, rm_i(lam))),
+            pl.BlockSpec((1, 1, bq), lambda b_, h_, lam: (b_, h_, rm_i(lam))),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda b_, h_, lam: (b_, h_, rm_i(lam), 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    cm_i = lambda lam: sched.cm_map(lam)[0]
+    cm_j = lambda lam: sched.cm_map(lam)[1]
+    grid_cm = (b, h, sched.cm_steps)
+    dk_ph, dv_ph = pl.pallas_call(
+        functools.partial(_dkv_kernel, sched=sched, scale=scale),
+        grid=grid_cm,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, lam: (b_, h_, cm_i(lam), 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, lam: (b_, h_ // g, cm_j(lam), 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, lam: (b_, h_ // g, cm_j(lam), 0)),
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, lam: (b_, h_, cm_i(lam), 0)),
+            pl.BlockSpec((1, 1, bq), lambda b_, h_, lam: (b_, h_, cm_i(lam))),
+            pl.BlockSpec((1, 1, bq), lambda b_, h_, lam: (b_, h_, cm_i(lam))),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, lam: (b_, h_, cm_j(lam), 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, lam: (b_, h_, cm_j(lam), 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, s_len, d), q.dtype),
+            jax.ShapeDtypeStruct((b, h, s_len, d), q.dtype),
+        ],
+        interpret=interpret,
+        scratch_shapes=[
+            pltpu.VMEM((bk, d), jnp.float32),
+            pltpu.VMEM((bk, d), jnp.float32),
+        ],
+    )(q, k, v, do, lse, delta)
+
+    if g > 1:  # sum per-q-head partials into kv heads
+        dk = dk_ph.reshape(b, hkv, g, s_len, d).sum(axis=2).astype(k.dtype)
+        dv = dv_ph.reshape(b, hkv, g, s_len, d).sum(axis=2).astype(v.dtype)
+    else:
+        dk, dv = dk_ph, dv_ph
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# BB baseline (paper's bounding-box strategy): 2-D grid + block-level guard
+# ---------------------------------------------------------------------------
+
+
+def _bb_fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_s, l_s, acc_s, *,
+                   sched: TriSched, scale: float):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, MASK_VALUE)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    # Paper's optimized BB: whole tile discarded by *block* coordinates.
+    @pl.when(j <= i)
+    def _active():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        s = jnp.where(_token_mask(sched, i, j, sched.bq, sched.bk), s,
+                      MASK_VALUE)
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_s[...] = l_s[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_s[...] = acc_s[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_s[...] = m_new
+
+    @pl.when(j == sched.n - 1)
+    def _emit():
+        l = l_s[...]
+        o_ref[0, 0] = (acc_s[...] / l).astype(o_ref.dtype)
+        lse_ref[0, 0] = (m_s[...] + jnp.log(l))[:, 0].astype(lse_ref.dtype)
+
+
+def fwd_bb(q, k, v, sched: TriSched, *, sm_scale=None, interpret=True):
+    """Bounding-box baseline: n x n grid, upper tiles guarded (dead DMA +
+    dead grid steps — the cost the paper eliminates)."""
+    b, h, s_len, d = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+    bq, bk, n = sched.bq, sched.bk, sched.n
+    kernel = functools.partial(_bb_fwd_kernel, sched=sched, scale=scale)
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=(b, h, n, n),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, i, j: (b_, h_ // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, i, j: (b_, h_ // g, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b_, h_, i, j: (b_, h_, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(q.shape, q.dtype),
+            jax.ShapeDtypeStruct((b, h, s_len), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out, lse

@@ -1,0 +1,87 @@
+"""Public attention op: schedule-aware triangular-domain flash attention.
+
+``triangular_attention`` is the single entry point the models use. It picks
+the schedule kind from the mask parameters, and dispatches between:
+
+  impl='pallas' — the TPU Pallas kernels (kernel.py); interpret=True on CPU.
+  impl='scan'   — the pure-XLA LTM scan (scan_impl.py); the dry-run / CPU
+                  training path. Differentiable via custom VJP.
+  impl='ref'    — the O(S^2)-memory oracle (ref.py); tests only.
+  impl='bb'     — the paper's bounding-box baseline Pallas kernel (fwd only).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.tri_attn import kernel as K
+from repro.kernels.tri_attn import ref as R
+from repro.kernels.tri_attn import scan_impl as SC
+from repro.kernels.tri_attn.kernel import TriSched
+
+
+def make_sched(s_len: int, *, block_q: int, block_k: int, window=None,
+               prefix: int = 0) -> TriSched:
+    bq = min(block_q, s_len)
+    bk = min(block_k, s_len)
+    if window is not None or prefix:
+        bk = bq = min(bq, bk)  # square tiles for band/prefix domains
+    assert s_len % bq == 0 and s_len % bk == 0, (
+        f"seq {s_len} not divisible by blocks ({bq}, {bk})")
+    if window is not None:
+        kind = "band"
+    elif prefix:
+        kind = "prefix"
+    else:
+        kind = "ltm"
+        bk = bq = min(bq, bk)  # triangular domain also needs square tiles
+    return TriSched(kind=kind, n=s_len // bq, bq=bq, bk=bk,
+                    window=window, prefix=prefix)
+
+
+@functools.lru_cache(maxsize=None)
+def _pallas_attention(sched: TriSched, scale: float, interpret: bool):
+    @jax.custom_vjp
+    def attn(q, k, v):
+        out, _ = K.fwd(q, k, v, sched, sm_scale=scale, interpret=interpret)
+        return out
+
+    def attn_fwd(q, k, v):
+        out, lse = K.fwd(q, k, v, sched, sm_scale=scale, interpret=interpret)
+        return out, (q, k, v, out, lse)
+
+    def attn_bwd(res, do):
+        q, k, v, out, lse = res
+        return K.bwd(q, k, v, out, lse, do, sched, sm_scale=scale,
+                     interpret=interpret)
+
+    attn.defvjp(attn_fwd, attn_bwd)
+    return attn
+
+
+def triangular_attention(q, k, v, *, window=None, prefix: int = 0,
+                         sm_scale=None, impl: str = "scan",
+                         block_q: int = 256, block_k: int = 256,
+                         interpret: bool = True):
+    """Causal (optionally windowed / prefix-causal) attention.
+
+    q: (B, H, S, D); k, v: (B, Hkv, S, D), H % Hkv == 0. Returns (B, H, S, D).
+    """
+    b, h, s_len, d = q.shape
+    scale = float(sm_scale if sm_scale is not None else 1.0 / (d ** 0.5))
+    if impl == "ref":
+        return R.mha_reference(q, k, v, sm_scale=scale, window=window,
+                               prefix=prefix)
+    sched = make_sched(s_len, block_q=block_q, block_k=block_k,
+                       window=window, prefix=prefix)
+    if impl == "pallas":
+        return _pallas_attention(sched, scale, interpret)(q, k, v)
+    if impl == "scan":
+        return SC.make_scan_attention(sched, scale)(q, k, v)
+    if impl == "bb":
+        out, _ = K.fwd_bb(q, k, v, sched, sm_scale=scale, interpret=interpret)
+        return out
+    raise ValueError(f"unknown impl {impl!r}")

@@ -1,0 +1,66 @@
+"""Pure-jnp oracle for triangular-domain attention (causal / band / prefix).
+
+This is the correctness reference for both the Pallas kernel (kernel.py) and
+the scan implementation (scan_impl.py). It materializes the full S x S score
+matrix — O(S^2) memory — so it is only usable at test scale.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = float(jnp.finfo(jnp.float32).min)
+
+
+def attention_mask(s_q: int, s_k: int, *, window=None, prefix: int = 0,
+                   q_offset: int = 0):
+    """Boolean (s_q, s_k) mask. True = attend.
+
+    causal:  k_pos <= q_pos
+    window:  additionally q_pos - k_pos < window   (sliding window, SWA)
+    prefix:  OR k_pos < prefix                     (bidirectional prefix, VLM)
+    q_offset shifts query positions (decode / chunked prefill).
+    """
+    qp = jnp.arange(s_q)[:, None] + q_offset
+    kp = jnp.arange(s_k)[None, :]
+    m = kp <= qp
+    if window is not None:
+        m &= (qp - kp) < window
+    if prefix:
+        m |= kp < prefix
+    return m
+
+
+def repeat_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """(B, Hkv, S, D) -> (B, H, S, D) by repeating each kv head G times."""
+    b, hkv, s, d = k.shape
+    g = n_heads // hkv
+    return jnp.repeat(k, g, axis=1) if g > 1 else k
+
+
+def mha_reference(q, k, v, *, sm_scale=None, window=None, prefix: int = 0,
+                  q_offset: int = 0, return_lse: bool = False):
+    """Masked multi-head attention oracle.
+
+    q: (B, H, Sq, D); k, v: (B, Hkv, Sk, D) with H % Hkv == 0.
+    Returns out (B, H, Sq, D) [and lse (B, H, Sq) if return_lse].
+    """
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+    k = repeat_kv(k, h)
+    v = repeat_kv(v, h)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = attention_mask(sq, sk, window=window, prefix=prefix,
+                          q_offset=q_offset)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p / l, v.astype(jnp.float32))
+    out = out.astype(q.dtype)
+    if return_lse:
+        lse = (m[..., 0] + jnp.log(l[..., 0]))
+        return out, lse
+    return out

@@ -1,0 +1,59 @@
+"""Pure-jnp oracle for the Euclidean distance matrix (paper §IV eq. 17)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mapping as M
+
+
+def edm_full(x: jnp.ndarray, *, squared: bool = False) -> jnp.ndarray:
+    """x: (N, d) -> (N, N) pairwise Euclidean distances (f32)."""
+    x = x.astype(jnp.float32)
+    sq = jnp.sum(x * x, axis=-1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (x @ x.T)
+    d2 = jnp.maximum(d2, 0.0)
+    n = x.shape[0]
+    d2 = jnp.where(jnp.eye(n, dtype=bool), 0.0, d2)  # exact self-distance
+    return d2 if squared else jnp.sqrt(d2)
+
+
+def pack_tri(full: jnp.ndarray, block: int) -> jnp.ndarray:
+    """(N, N) -> block-packed lower-tri storage (T, block, block).
+
+    Block lambda holds full[i*b:(i+1)*b, j*b:(j+1)*b] with (i,j)=g(lambda).
+    This is the Gustavson/Jung packed layout the paper cites — ~half the
+    memory of the full matrix.
+    """
+    n = full.shape[0] // block
+    t = M.tri(n)
+    ii = np.empty(t, np.int32)
+    jj = np.empty(t, np.int32)
+    for lam in range(t):
+        ii[lam], jj[lam] = M.ltm_map(lam)
+    blocks = full.reshape(n, block, n, block).transpose(0, 2, 1, 3)
+    return blocks[ii, jj]
+
+
+def unpack_tri(packed: jnp.ndarray, n_rows: int, *,
+               symmetric: bool = True) -> jnp.ndarray:
+    """(T, b, b) -> (N, N); upper triangle mirrored if symmetric else 0."""
+    t, b, _ = packed.shape
+    n = n_rows // b
+    assert M.tri(n) == t
+    full = np.zeros((n, n, b, b), np.float32)
+    for lam in range(t):
+        i, j = M.ltm_map(lam)
+        full[i, j] = packed[lam]
+        if symmetric and i != j:
+            full[j, i] = packed[lam].T
+    out = jnp.asarray(full.transpose(0, 2, 1, 3).reshape(n_rows, n_rows))
+    if symmetric:
+        return out
+    return out
+
+
+def edm_packed_ref(x: jnp.ndarray, block: int, *, squared: bool = False):
+    """Oracle for the packed kernels: pack_tri(edm_full(x))."""
+    return pack_tri(edm_full(x, squared=squared), block)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the fused WKV6 (RWKV-6 Finch) recurrence.
+
+Per head (state S: (hd_k, hd_v)):
+    out_t = r_t . (S_{t-1} + diag(u) k_t^T v_t)
+    S_t   = diag(w_t) S_{t-1} + k_t^T v_t,   w_t = exp(lw_t), lw_t <= 0
+
+Shapes: r, k, v, lw (B, L, H, hd); u (H, hd); s0 (B, H, hd, hd).
+Returns (out (B, L, H, hd), s_L). All math f32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_ref(r, k, v, lw, u, s0=None):
+    r, k, v, lw = (t.astype(jnp.float32) for t in (r, k, v, lw))
+    u = u.astype(jnp.float32)
+    b, l, h, hd = r.shape
+    s = (jnp.zeros((b, h, hd, hd), jnp.float32) if s0 is None
+         else s0.astype(jnp.float32))
+
+    def step(s, args):
+        rt, kt, vt, lwt = args  # (B, H, hd) each
+        kv = kt[..., :, None] * vt[..., None, :]        # (B, H, hd, hd)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, s) + \
+            jnp.einsum("bhk,hk,bhk,bhv->bhv", rt, u, kt, vt)
+        s = jnp.exp(lwt)[..., None] * s + kv
+        return s, out
+
+    sw = lambda t: t.swapaxes(0, 1)
+    s_end, outs = jax.lax.scan(step, s, (sw(r), sw(k), sw(v), sw(lw)))
+    return sw(outs), s_end

@@ -1,0 +1,26 @@
+"""Mesh construction. FUNCTIONS only — importing this module must never
+touch jax device state (dryrun.py sets XLA_FLAGS before first jax init)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e pod meshes: 16x16 = 256 chips per pod; 2 pods = 512 chips.
+
+    Axes: "data" = DP/FSDP, "model" = TP; "pod" composes with "data" for the
+    batch dimension (pure DP across the DCI, FSDP inside the pod), and is
+    the documented GPipe insertion point past 4k chips (DESIGN.md §5).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    auto = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=auto)
+
+
+def make_local_mesh():
+    """All local devices on a 1-D "data" axis (CPU tests / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))

@@ -1,0 +1,56 @@
+"""Serving driver: slot-based continuous-batching engine on a reduced
+config (real decode steps on CPU; the full-scale decode path is what
+dryrun.py lowers for the decode_32k / long_500k cells).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --requests 6
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import registry as REG
+from repro.models import model as MD
+from repro.serve.engine import Engine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-9b", choices=REG.ARCH_IDS)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=96)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = REG.smoke_config(args.arch)
+    params = MD.init_params(jax.random.key(args.seed), cfg)
+    engine = Engine(params, cfg, slots=args.slots, max_len=args.max_len,
+                    temperature=args.temperature, seed=args.seed)
+
+    rng = np.random.default_rng(args.seed)
+    t0 = time.time()
+    for uid in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab_size,
+                              size=rng.integers(4, args.prompt_len + 1))
+        engine.submit(prompt, max_new=args.max_new, uid=uid)
+    results = engine.run()
+    dt = time.time() - t0
+    n_tok = sum(len(v) for v in results.values())
+    for uid in sorted(results):
+        print(f"req {uid}: {len(results[uid])} tokens -> "
+              f"{results[uid][:8]}...")
+    print(f"{len(results)}/{args.requests} requests, {n_tok} tokens "
+          f"in {dt:.1f}s ({n_tok/dt:.1f} tok/s, {args.slots} slots)")
+    return results
+
+
+if __name__ == "__main__":
+    main()

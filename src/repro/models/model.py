@@ -1,0 +1,210 @@
+"""Top-level model: embedding -> scanned superlayers -> norm -> LM head.
+
+Public API (all pure functions over a params pytree):
+  init_params(key, cfg)                       -> params
+  forward(params, cfg, batch, ...)            -> (hidden, aux[, states])
+  logits_from_hidden(params, cfg, hidden)     -> (B, S, padded_vocab) f32
+  loss_fn(params, cfg, batch, ...)            -> (scalar loss, metrics)
+  decode_step(params, cfg, cache, tok, pos)   -> (logits, new_cache)
+  init_cache / prefill_cache
+
+Batch dict fields:
+  tokens : (B, S_tok) int32                   (absent for pure-embeds input)
+  embeds : (B, P, d) model-dtype              (stub frontend: audio frames /
+                                               vision patches, prepended)
+  labels : (B, S) int32                       (next-token targets)
+  mask   : (B, S) f32 optional                (loss weights; e.g. 0 on prefix)
+
+The VLM prefix (cfg.n_patches > 0) switches attention to the prefix-causal
+domain (PrefixSchedule — rectangle ∪ triangle, beyond-paper mapping).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.parallel import hints
+
+_DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+
+
+def param_dtype(cfg):
+    return _DTYPES[cfg.dtype]
+
+
+def init_params(key, cfg):
+    dtype = param_dtype(cfg)
+    k_emb, k_stack, k_head = jax.random.split(key, 3)
+    d, vp = cfg.d_model, cfg.padded_vocab
+    params = {
+        "embed": (jax.random.normal(k_emb, (vp, d), jnp.float32)
+                  * 0.02).astype(dtype),
+        "layers": T.init_stack(k_stack, cfg, dtype),
+        "final_norm": jnp.ones((d,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(k_head, (d, vp), dtype=dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(params, cfg, batch):
+    """Token embeddings, with optional stub-frontend prefix embeds."""
+    parts = []
+    if "embeds" in batch and batch["embeds"] is not None:
+        parts.append(batch["embeds"].astype(param_dtype(cfg)))
+    if "tokens" in batch and batch["tokens"] is not None:
+        parts.append(jnp.take(params["embed"], batch["tokens"], axis=0))
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    return x
+
+
+def forward(params, cfg, batch, *, attn_impl: str = "scan",
+            remat: bool = True, collect_state: bool = False,
+            block: int = 512, act_sharding=None):
+    """Returns (hidden (B, S, d), aux, states_or_None).
+
+    act_sharding: optional NamedSharding pinned onto the (B, S, d) scan
+    carry — Megatron-style activation partitioning (batch over DP, d over
+    TP) that bounds the per-chip saved-carry memory of the layer scan."""
+    x = embed_inputs(params, cfg, batch)
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    prefix = cfg.n_patches if cfg.frontend == "vision_patches" else 0
+
+    def step(x, layer_params):
+        if act_sharding is not None:
+            x = jax.lax.with_sharding_constraint(x, act_sharding)
+        x = hints.constrain(x, "act_seq")
+        x, aux, st = T.superlayer_fwd(
+            layer_params, x, cfg, positions=positions, prefix=prefix,
+            attn_impl=attn_impl, block=block, collect_state=collect_state)
+        return x, (aux, st)
+
+    if remat:
+        # 'remat_policy' hint (§Perf): save named intermediates (e.g. the
+        # attention context) so backward skips re-running the triangular
+        # tile scan; default full remat.
+        pol_names = hints.get("remat_policy")
+        policy = (jax.checkpoint_policies.save_only_these_names(*pol_names)
+                  if pol_names else jax.checkpoint_policies.nothing_saveable)
+        step = jax.checkpoint(step, policy=policy)
+    x, (auxs, states) = jax.lax.scan(step, x, params["layers"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, jnp.sum(auxs), (states if collect_state else None)
+
+
+def logits_from_hidden(params, cfg, hidden):
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    return (hidden @ head).astype(jnp.float32)
+
+
+def cross_entropy(logits, labels, mask, vocab_size: int):
+    """Mean CE over masked positions. logits f32 (B, S, Vp); labels (B, S).
+
+    Positions past the true vocab are never targets; padded-vocab logits are
+    masked to -inf so they cannot absorb probability mass.
+    """
+    vp = logits.shape[-1]
+    if vp > vocab_size:
+        neg = jnp.finfo(jnp.float32).min
+        pad = jnp.arange(vp) >= vocab_size
+        logits = jnp.where(pad, neg, logits)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def loss_fn(params, cfg, batch, *, attn_impl: str = "scan",
+            remat: bool = True, aux_weight: float = 0.01, block: int = 512,
+            act_sharding=None):
+    hidden, aux, _ = forward(params, cfg, batch, attn_impl=attn_impl,
+                             remat=remat, block=block,
+                             act_sharding=act_sharding)
+    logits = logits_from_hidden(params, cfg, hidden)
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    ce = cross_entropy(logits, labels, mask, cfg.vocab_size)
+    loss = ce + aux_weight * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return T.init_cache(cfg, batch, max_len, dtype)
+
+
+def decode_step(params, cfg, cache, tokens, pos):
+    """One decode step. tokens: (B, 1) int32; pos: scalar int32 (absolute
+    position of the new token). Returns (logits (B, 1, Vp) f32, new_cache)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+
+    def step(x, scanned):
+        layer_params, layer_cache = scanned
+        x, new_cache = T.superlayer_decode(layer_params, x, cfg, layer_cache,
+                                           pos)
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(step, x, (params["layers"], cache))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return logits_from_hidden(params, cfg, x), new_cache
+
+
+def prefill_cache(params, cfg, batch, max_len: int, *,
+                  attn_impl: str = "scan", block: int = 512,
+                  cache_dtype=jnp.bfloat16):
+    """Run the full-sequence forward, collect per-layer states, and assemble
+    a decode cache covering positions [0, S). Returns (hidden, cache)."""
+    hidden, _, states = forward(params, cfg, batch, attn_impl=attn_impl,
+                                remat=False, collect_state=True, block=block)
+    b, s = hidden.shape[0], hidden.shape[1]
+    cache = init_cache(cfg, b, max_len, cache_dtype)
+
+    def fill(c, st):
+        # KV layers: states carry (n_sl, B, S, Hkv, hd); write into slots.
+        if c.ndim == 5 and st.ndim == 5:  # (n_sl, B, S_slots, Hkv, hd)
+            s_slots = c.shape[2]
+            if cfg.sliding_window is not None and s > s_slots:
+                # rolling buffer: keep the last window, slot p % W
+                take = st[:, :, s - s_slots:]
+                roll = (s - s_slots) % s_slots
+                take = jnp.roll(take, shift=roll, axis=2)
+                return take.astype(c.dtype)
+            return jax.lax.dynamic_update_slice(
+                c, st[:, :, :s_slots].astype(c.dtype), (0, 0, 0, 0, 0))
+        return st.astype(c.dtype)  # recurrent states replace wholesale
+
+    cache = jax.tree.map(fill, cache, states)
+    return hidden, cache
+
+
+# ---------------------------------------------------------------------------
+# Convenience jitted entry points (CPU/example scale)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "attn_impl", "block"))
+def jit_loss(params, cfg, batch, attn_impl="scan", block=512):
+    return loss_fn(params, cfg, batch, attn_impl=attn_impl, block=block)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def jit_decode_step(params, cfg, cache, tokens, pos):
+    return decode_step(params, cfg, cache, tokens, pos)

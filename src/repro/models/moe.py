@@ -1,0 +1,111 @@
+"""Token-choice top-k Mixture-of-Experts with capacity-bounded scatter
+dispatch (Mixtral / Granite-MoE / Jamba style).
+
+Dispatch strategy: rank tokens within each expert by cumulative count and
+scatter into a dense (E, C, d) buffer; tokens ranked past the capacity C are
+dropped (standard capacity-factor semantics). This avoids the O(T*E*C)
+one-hot dispatch tensor of the mesh-TF formulation while staying fully
+dense/XLA-friendly and differentiable. Expert weights carry a leading E dim
+that the sharding rules map to the expert-parallel axis when divisible.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.parallel import hints
+
+
+def init_moe(key, cfg, dtype):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], (d, e), dtype=jnp.float32),
+        "wi": dense_init(ks[1], (e, d, f), in_axis=1, dtype=dtype),
+        "wo": dense_init(ks[3], (e, f, d), in_axis=1, dtype=dtype),
+    }
+    if cfg.mlp_activation == "swiglu":
+        p["wg"] = dense_init(ks[2], (e, d, f), in_axis=1, dtype=dtype)
+    return p
+
+
+def moe_mlp(params, x, cfg, *, return_aux: bool = True,
+            full_capacity: bool = False):
+    """x: (B, S, d) -> (B, S, d) [, aux load-balance loss].
+
+    top-k routing with softmax over the selected logits (Mixtral style).
+    full_capacity=True sizes the expert buffers so NO token is ever dropped
+    (serving semantics — decode paths must be drop-free or incremental
+    decoding diverges from the batched forward).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    t = b * s
+    xf = x.reshape(t, d)
+
+    # dispatch groups (§Perf): ranking tokens with a GLOBAL cumsum chains
+    # every DP shard; grouping the ranking (groups aligned with the batch
+    # sharding) keeps dispatch local per shard — the standard
+    # local-dispatch formulation. groups=1 == the original global dispatch.
+    groups = int(hints.get("moe_groups", 1))
+    if t % groups:
+        groups = 1
+    tg = t // groups
+
+    logits = (xf.astype(jnp.float32) @ params["router"])  # (T, E)
+    top_logits, top_e = jax.lax.top_k(logits, k)  # (T, k)
+    weights = jax.nn.softmax(top_logits, axis=-1)  # (T, k)
+
+    # load-balance aux (Switch-style): E * sum_e f_e * p_e
+    probs = jax.nn.softmax(logits, axis=-1)
+    assign = jax.nn.one_hot(top_e, e, dtype=jnp.float32).sum(1)  # (T, E)
+    aux = e * jnp.mean(jnp.mean(assign, 0) * jnp.mean(probs, 0))
+
+    # capacity: per-expert slots per group
+    cap = tg if full_capacity else max(1, int(k * tg / e *
+                                              cfg.capacity_factor))
+
+    # rank of each (token, slot) within its (group, expert)
+    ge = top_e.reshape(groups, tg * k)  # (G, Tg*k)
+    onehot = jax.nn.one_hot(ge, e, dtype=jnp.int32)  # (G, Tg*k, E)
+    rank = (jnp.cumsum(onehot, axis=1) - onehot)  # exclusive count
+    rank = jnp.take_along_axis(rank, ge[..., None], axis=2)[..., 0]
+    keep = rank < cap  # (G, Tg*k)
+
+    # scatter tokens into the (G, E, C, d) expert buffers
+    xg = hints.constrain(xf.reshape(groups, tg, d), "moe_buf3")
+    gidx = jnp.broadcast_to(jnp.arange(groups)[:, None], ge.shape)
+    tok_idx = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(tg), k)[None], ge.shape)
+    scat_e = jnp.where(keep, ge, e - 1)  # clamp; masked below anyway
+    scat_c = jnp.where(keep, rank, cap - 1)
+    vals = jnp.where(keep[..., None], xg[gidx, tok_idx], 0)
+    buf = jnp.zeros((groups, e, cap, d), xf.dtype)
+    buf = buf.at[gidx, scat_e, scat_c].add(vals)  # unique (g,e,c) if kept
+    buf = hints.constrain(buf, "moe_buf")
+
+    # expert FFN on (G, E, C, d). 'moe_wi'/'moe_wo' hints (§Perf): gather
+    # the FSDP-sharded expert weights before the einsum — contracting a
+    # data-sharded d otherwise all-reduces the (G,E,C,f) ACTIVATIONS per
+    # layer (GBs) instead of gathering the (small) weights (MBs).
+    wi = hints.constrain(params["wi"], "moe_wi")
+    wo = hints.constrain(params["wo"], "moe_wo")
+    if cfg.mlp_activation == "swiglu":
+        wg = hints.constrain(params["wg"], "moe_wi")
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, wg)) * \
+            jnp.einsum("gecd,edf->gecf", buf, wi)
+    else:
+        h = jax.nn.relu(jnp.einsum("gecd,edf->gecf", buf, wi))
+        h = h * h
+    out_buf = jnp.einsum("gecf,efd->gecd", h, wo)
+
+    # gather back and combine with routing weights
+    w_g = weights.reshape(groups, tg * k)
+    gathered = out_buf[gidx, scat_e, scat_c]  # (G, Tg*k, d)
+    gathered = jnp.where(keep[..., None], gathered, 0) * w_g[..., None]
+    out = jnp.zeros((groups, tg, d), gathered.dtype)
+    out = out.at[gidx, tok_idx].add(gathered)
+    out = out.reshape(b, s, d).astype(x.dtype)
+    return (out, aux) if return_aux else out

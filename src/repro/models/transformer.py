@@ -1,0 +1,198 @@
+"""Layer/superlayer assembly for all architecture families.
+
+A *superlayer* is one scan step: ``cfg.layer_pattern`` consecutive layers
+(dense/moe archs: 1 attn layer; jamba: the 8-layer mamba/attn block; rwkv:
+1 rwkv layer). Stacking superlayers under ``lax.scan`` keeps the HLO size
+O(1) in depth — required for 512-way SPMD compiles of 96..126-layer models.
+
+Each layer is pre-norm residual:
+  attn : x += Attn(RMS(x));  x += FFN_or_MoE(RMS(x))
+  mamba: x += Mamba(RMS(x)); x += FFN_or_MoE(RMS(x))   (jamba style)
+  rwkv : x += TimeMix(RMS(x)); x += ChannelMix(RMS(x))
+
+MoE placement follows cfg.is_moe_layer(global_idx); because
+``moe_every`` divides the pattern length, the pattern position alone
+determines it and every superlayer has identical pytree structure.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba as MB
+from repro.models import moe as MOE
+from repro.models import rwkv6 as RW
+
+
+def _ffn_is_moe(cfg, p_idx: int) -> bool:
+    return cfg.is_moe_layer(p_idx)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key, cfg, kind: str, p_idx: int, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 2)
+    p = {"norm1": jnp.ones((d,), jnp.float32)}
+    if kind == "attn":
+        p["mixer"] = L.init_attention(ks[0], cfg, dtype)
+    elif kind == "mamba":
+        p["mixer"] = MB.init_mamba(ks[0], cfg, dtype)
+    elif kind == "rwkv":
+        p["mixer"] = RW.init_rwkv(ks[0], cfg, dtype)
+        p["norm2"] = jnp.ones((d,), jnp.float32)
+        return p  # rwkv channel-mix params live inside the mixer dict
+    else:
+        raise ValueError(kind)
+    p["norm2"] = jnp.ones((d,), jnp.float32)
+    p["ffn"] = (MOE.init_moe(ks[1], cfg, dtype) if _ffn_is_moe(cfg, p_idx)
+                else L.init_mlp(ks[1], cfg, dtype))
+    return p
+
+
+def init_superlayer(key, cfg, dtype):
+    keys = jax.random.split(key, cfg.superlayer)
+    return {
+        f"l{p}": init_layer(keys[p], cfg, cfg.layer_pattern[p], p, dtype)
+        for p in range(cfg.superlayer)
+    }
+
+
+def init_stack(key, cfg, dtype):
+    """All superlayers, stacked on a leading n_superlayers axis for scan."""
+    keys = jax.random.split(key, cfg.n_superlayers)
+    per = [init_superlayer(k, cfg, dtype) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def layer_fwd(p, x, cfg, kind: str, p_idx: int, *, positions, prefix: int,
+              attn_impl: str, block: int, collect_state: bool):
+    """Returns (x, aux, state). state is None unless collect_state."""
+    aux = jnp.zeros((), jnp.float32)
+    state = None
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if kind == "attn":
+        out, k, v = L.attention(p["mixer"], h, cfg, positions=positions,
+                                prefix=prefix, attn_impl=attn_impl,
+                                block=block)
+        if collect_state:
+            state = {"k": k, "v": v}
+        x = x + out
+    elif kind == "mamba":
+        out, st = MB.mamba_mix(p["mixer"], h, cfg, state=None)
+        if collect_state:
+            state = st
+        x = x + out
+    elif kind == "rwkv":
+        out, st_t = RW.rwkv_time_mix(p["mixer"], h, cfg, state=None)
+        x = x + out
+        h2 = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+        out2, shift_c = RW.rwkv_channel_mix(p["mixer"], h2, cfg, state=None)
+        if collect_state:
+            state = dict(st_t, shift_c=shift_c)
+        return x + out2, aux, state
+
+    h2 = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+    if _ffn_is_moe(cfg, p_idx):
+        out2, aux = MOE.moe_mlp(p["ffn"], h2, cfg)
+    else:
+        out2 = L.mlp(p["ffn"], h2, cfg)
+    return x + out2, aux, state
+
+
+def superlayer_fwd(p, x, cfg, *, positions, prefix, attn_impl, block,
+                   collect_state):
+    aux = jnp.zeros((), jnp.float32)
+    states = {}
+    for i, kind in enumerate(cfg.layer_pattern):
+        x, a, st = layer_fwd(p[f"l{i}"], x, cfg, kind, i, positions=positions,
+                             prefix=prefix, attn_impl=attn_impl, block=block,
+                             collect_state=collect_state)
+        aux = aux + a
+        if collect_state:
+            states[f"l{i}"] = st
+    return x, aux, (states if collect_state else None)
+
+
+# ---------------------------------------------------------------------------
+# Single-token decode
+# ---------------------------------------------------------------------------
+
+
+def layer_decode(p, x, cfg, kind: str, p_idx: int, cache, pos):
+    """x: (B, 1, d); cache: per-layer state dict. Returns (x, new_cache)."""
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if kind == "attn":
+        out, ck, cv = L.decode_attention(p["mixer"], h, cfg,
+                                         cache_k=cache["k"],
+                                         cache_v=cache["v"], pos=pos)
+        new_cache = {"k": ck, "v": cv}
+        x = x + out
+    elif kind == "mamba":
+        out, new_cache = MB.mamba_mix(p["mixer"], h, cfg, state=cache)
+        x = x + out
+    elif kind == "rwkv":
+        st_t = {"shift": cache["shift"], "s": cache["s"]}
+        out, st_t = RW.rwkv_time_mix(p["mixer"], h, cfg, state=st_t)
+        x = x + out
+        h2 = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+        out2, shift_c = RW.rwkv_channel_mix(p["mixer"], h2, cfg,
+                                            state=cache["shift_c"])
+        return x + out2, dict(st_t, shift_c=shift_c)
+
+    h2 = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+    if _ffn_is_moe(cfg, p_idx):
+        out2 = MOE.moe_mlp(p["ffn"], h2, cfg, return_aux=False,
+                           full_capacity=True)  # serving never drops
+    else:
+        out2 = L.mlp(p["ffn"], h2, cfg)
+    return x + out2, new_cache
+
+
+def superlayer_decode(p, x, cfg, cache, pos):
+    new_cache = {}
+    for i, kind in enumerate(cfg.layer_pattern):
+        x, new_cache[f"l{i}"] = layer_decode(
+            p[f"l{i}"], x, cfg, kind, i, cache[f"l{i}"], pos)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+
+def init_layer_cache(cfg, kind: str, batch: int, max_len: int, dtype):
+    if kind == "attn":
+        s = max_len if cfg.sliding_window is None \
+            else min(cfg.sliding_window, max_len)
+        return {
+            "k": jnp.zeros((batch, s, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((batch, s, cfg.n_kv_heads, cfg.head_dim), dtype),
+        }
+    if kind == "mamba":
+        return MB.init_mamba_state(cfg, batch, dtype)
+    if kind == "rwkv":
+        return RW.init_rwkv_state(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Stacked (n_superlayers, ...) decode cache pytree."""
+    per = {
+        f"l{p}": init_layer_cache(cfg, cfg.layer_pattern[p], batch, max_len,
+                                  dtype)
+        for p in range(cfg.superlayer)
+    }
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_superlayers,) + x.shape), per)

@@ -1,0 +1,57 @@
+"""Sharding hints: scoped, optional layout constraints for model internals.
+
+The baseline model code is layout-agnostic (XLA SPMD propagates from the
+param/batch shardings alone). The §Perf hill-climb showed propagation makes
+three costly choices at scale:
+
+  * attention contracts the model-sharded head_dim -> per-TILE score
+    all-reduces (x T(n) trips),
+  * the MoE dispatch ranks tokens with a GLOBAL cumsum -> cross-device
+    serialization + replicated (E, C, d) buffers,
+  * the TP MLP emits full-sequence f32 activation all-reduces per layer.
+
+Rather than hard-coding fixes (which would impose mesh knowledge on model
+code), optimization passes set hints inside a context; model code applies
+them via `constrain`/`get` when present. Traced-once semantics: dryrun.py
+sets hints around jit(...).lower(), so the constraints are baked into each
+lowered cell. No hint -> exactly the baseline program.
+
+Hints used:
+  attn_qkv   : PartitionSpec for (B, H, S, D) attention tensors (head TP)
+  act_seq    : PartitionSpec for the (B, S, d) residual carry
+  moe_groups : int — dispatch-group count for local (per-shard) MoE routing
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Dict, Optional
+
+import jax
+
+_HINTS: contextvars.ContextVar[Dict[str, Any]] = contextvars.ContextVar(
+    "sharding_hints", default={})
+
+
+@contextlib.contextmanager
+def hints(**kw):
+    merged = dict(_HINTS.get())
+    merged.update({k: v for k, v in kw.items() if v is not None})
+    token = _HINTS.set(merged)
+    try:
+        yield
+    finally:
+        _HINTS.reset(token)
+
+
+def get(name: str, default=None):
+    return _HINTS.get().get(name, default)
+
+
+def constrain(x, name: str):
+    """Apply with_sharding_constraint if the hint is set (else identity)."""
+    spec = get(name)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

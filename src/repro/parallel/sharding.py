@@ -1,0 +1,224 @@
+"""Sharding rules: params / batch / cache pytrees -> NamedSharding.
+
+Scheme (single-pod mesh ("data", "model") = 16 x 16; multi-pod prepends
+"pod"):
+
+  * batch dim            -> ("pod", "data")   (pure DP across pods composes
+                                               with in-pod DP/FSDP)
+  * TP dims (heads, d_ff,
+    vocab, d_inner)      -> "model"
+  * FSDP dim (the other
+    large param dim)     -> "data"            (Zero-3 style; XLA all-gathers
+                                               per layer inside the scan)
+  * experts              -> "data" when E % |data| == 0 (EP), else FSDP
+                            fallback on the next dim
+  * decode KV sequence   -> "model" (flash-decode style split of the
+                            softmax reduction), batch on ("pod","data");
+                            long-context B=1 shards seq over everything
+
+Every rule degrades to replication when the dimension is not divisible by
+the axis size (the "divisibility fallback") — this is what lets one rule set
+serve 10 architectures from 0.9 B to 405 B parameters unchanged.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    """Product of mesh-axis sizes; 0 if any axis is absent from the mesh
+    (signals fallback() to drop the entry — e.g. restoring a TP-sharded
+    checkpoint onto a data-only elastic mesh)."""
+    if axis is None:
+        return 1
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    if any(a not in mesh.shape for a in axes):
+        return 0
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def dp_axes(mesh: Mesh):
+    """The composite batch axis: ("pod", "data") when a pod axis exists."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def fallback(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop any spec entry whose axis size does not divide the dim."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    fixed = []
+    for dim, axis in zip(shape, entries):
+        size = _axis_size(mesh, axis) if axis else 1
+        fixed.append(axis if axis and size and dim % size == 0 else None)
+    return P(*fixed)
+
+
+def named(mesh: Mesh, spec: P, shape) -> NamedSharding:
+    return NamedSharding(mesh, fallback(spec, tuple(shape), mesh))
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules (keyed by leaf name; stacked superlayer dim handled by
+# rank: specs are written for the UNstacked rank and left-padded with None)
+# ---------------------------------------------------------------------------
+
+# name -> spec for the param's intrinsic rank
+_PARAM_RULES = {
+    # top level
+    "embed": P("model", "data"),        # (vocab, d): vocab TP, d FSDP
+    "lm_head": P("data", "model"),      # (d, vocab)
+    # attention
+    "wq": P("data", "model"),
+    "wk": P("data", "model"),
+    "wv": P("data", "model"),
+    "wo": P("model", "data"),
+    # dense mlp
+    "wi": P("data", "model"),
+    "wg": P("data", "model"),
+    # mamba
+    "in_proj": P("data", "model"),
+    "conv_w": P(None, "model"),
+    "x_proj": P("model", None),
+    "dt_bias": P("model"),
+    "a_log": P("model", None),
+    "d_skip": P("model"),
+    "out_proj": P("model", "data"),
+    # rwkv
+    "wr": P("data", "model"),
+    "w_lora_a": P("data", None),
+    "w_lora_b": P(None, "data"),
+    "cm_wk": P("data", "model"),
+    "cm_wv": P("model", "data"),
+    "cm_wr": P("data", "model"),
+    # moe (rank-3; expert dim resolved in _param_spec)
+    "router": P("data", None),
+}
+
+_MOE_NAMES = {"wi", "wg", "wo"}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+    return ""
+
+
+def _param_spec(path, leaf, mesh: Mesh) -> P:
+    name = _leaf_name(path)
+    rank = leaf.ndim
+    path_keys = [str(e.key) for e in path
+                 if isinstance(e, jax.tree_util.DictKey)]
+    stacked = "layers" in path_keys  # leading n_superlayers dim
+
+    base_rank = rank - (1 if stacked else 0)
+
+    if name in _MOE_NAMES and base_rank == 3:  # moe expert weights (E, a, b)
+        e = leaf.shape[1] if stacked else leaf.shape[0]
+        ep_ok = e % _axis_size(mesh, "data") == 0
+        if name == "wo":  # (E, f, d)
+            spec = P("data", "model", None) if ep_ok else P(None, "model",
+                                                            "data")
+        else:  # wi/wg (E, d, f)
+            spec = P("data", None, "model") if ep_ok else P(None, "data",
+                                                            "model")
+    elif name in _PARAM_RULES and len(_PARAM_RULES[name]) == base_rank:
+        spec = _PARAM_RULES[name]
+    else:
+        spec = P()  # norms, biases, mu, u, w0, ln_x_*: replicate
+
+    if stacked:
+        spec = P(*((None,) + tuple(spec)))
+    return fallback(spec, leaf.shape, mesh)
+
+
+def param_shardings(mesh: Mesh, params_tree, overrides=None):
+    """NamedSharding pytree for a params (or ShapeDtypeStruct) pytree.
+
+    overrides: {leaf_name: PartitionSpec} replacing the rule for that leaf
+    (stacked leading dim handled; divisibility fallback still applies) —
+    used by §Perf passes, e.g. embed -> P(None, all-axes) so the token
+    gather and its scatter-add gradient are collective-free."""
+
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        if overrides and name in overrides:
+            s = overrides[name]
+            return NamedSharding(mesh, fallback(s, leaf.shape, mesh))
+        return NamedSharding(mesh, _param_spec(path, leaf, mesh))
+
+    return jax.tree_util.tree_map_with_path(spec, params_tree)
+
+
+def param_specs_tree(mesh: Mesh, params_tree):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _param_spec(path, leaf, mesh), params_tree)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache rules
+# ---------------------------------------------------------------------------
+
+
+def batch_shardings(mesh: Mesh, batch_tree):
+    dp = dp_axes(mesh)
+
+    def spec(path, leaf):
+        s = P(dp, *([None] * (leaf.ndim - 1)))
+        return NamedSharding(mesh, fallback(s, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_tree)
+
+
+def cache_shardings(mesh: Mesh, cache_tree):
+    """Decode state: (n_sl, B, ...) pytree.
+
+    KV caches (rank 5: n_sl, B, S, Hkv, hd): batch over dp when divisible,
+    otherwise (long-context B=1) shard the KV sequence over every mesh axis;
+    when batch IS sharded, additionally shard KV seq over "model"
+    (flash-decode style partial-softmax split, resolved by XLA collectives).
+    Recurrent states: batch over dp, feature dim over "model".
+    """
+    dp = dp_axes(mesh)
+    all_axes = tuple(mesh.axis_names)
+
+    def spec(path, leaf):
+        shape = leaf.shape
+        if leaf.ndim == 5:  # KV cache
+            b_ok = shape[1] % _axis_size(mesh, dp) == 0
+            if b_ok:
+                s = P(None, dp, "model", None, None)
+            else:
+                s = P(None, None, all_axes, None, None)
+        elif leaf.ndim >= 3:  # mamba h / rwkv s / conv
+            s = P(None, dp, "model", *([None] * (leaf.ndim - 3)))
+        else:
+            s = P(None, dp)
+        return NamedSharding(mesh, fallback(s, shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)
+
+
+def scalar_sharding(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def token_shardings(mesh: Mesh, tree):
+    """Decode-step tokens (B, 1) / pos scalars."""
+    dp = dp_axes(mesh)
+
+    def spec(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        s = P(dp, *([None] * (leaf.ndim - 1)))
+        return NamedSharding(mesh, fallback(s, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(spec, tree)

@@ -1,0 +1,128 @@
+"""Three-term roofline model for TPU v5e.
+
+  compute_s    = flops_per_device / PEAK_FLOPS
+  memory_s     = hbm_bytes_per_device / HBM_BW
+  collective_s = collective_bytes_per_device / ICI_BW
+
+(All inputs from roofline/hlo_parse.py are per-device, so dividing by
+per-chip peaks equals the brief's global/(chips*peak) formulation.)
+
+The dominant term is the bottleneck; step time ~ max(terms) under perfect
+overlap, sum(terms) with none. MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D
+(MoE) measures how much of the compiled compute is "useful" — remat
+recompute, padded vocab and dead masked tiles all show up as ratio < 1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+# TPU v5e, per chip
+PEAK_FLOPS = 197e12     # bf16 FLOP/s
+HBM_BW = 819e9          # bytes/s
+ICI_BW = 50e9           # bytes/s per link (brief's constant)
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float = 0.0
+    hlo_flops_per_dev: float = 0.0
+    n_chips: int = 1
+    # memory term with the attention-scan interior treated as VMEM-resident
+    # (what the Pallas tri_attn kernel achieves on real TPU)
+    memory_kernel_adj_s: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def dominant_kernel_adj(self) -> str:
+        terms = {"compute": self.compute_s,
+                 "memory": self.memory_kernel_adj_s or self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO flops summed over chips)."""
+        total = self.hlo_flops_per_dev * self.n_chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu_at_bound(self) -> float:
+        """Model FLOPs utilization if the step ran at the dominant term."""
+        if self.bound_s == 0:
+            return 0.0
+        return (self.model_flops / (self.n_chips * PEAK_FLOPS)) / self.bound_s
+
+    @property
+    def bound_kernel_adj_s(self) -> float:
+        return max(self.compute_s,
+                   self.memory_kernel_adj_s or self.memory_s,
+                   self.collective_s)
+
+    @property
+    def mfu_at_bound_kernel_adj(self) -> float:
+        if self.bound_kernel_adj_s == 0:
+            return 0.0
+        return (self.model_flops / (self.n_chips * PEAK_FLOPS)) \
+            / self.bound_kernel_adj_s
+
+    def as_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "memory_kernel_adj_s": self.memory_kernel_adj_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "dominant_kernel_adj": self.dominant_kernel_adj,
+            "model_flops": self.model_flops,
+            "hlo_flops_per_dev": self.hlo_flops_per_dev,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_at_bound": self.mfu_at_bound,
+            "mfu_at_bound_kernel_adj": self.mfu_at_bound_kernel_adj,
+            "n_chips": self.n_chips,
+        }
+
+
+def terms_from_analysis(an: dict, *, n_chips: int,
+                        model_flops: float = 0.0) -> RooflineTerms:
+    return RooflineTerms(
+        compute_s=an["flops"] / PEAK_FLOPS,
+        memory_s=an["hbm_bytes"] / HBM_BW,
+        memory_kernel_adj_s=an.get("hbm_bytes_kernel_adj",
+                                   an["hbm_bytes"]) / HBM_BW,
+        collective_s=an["collective_bytes_total"] / ICI_BW,
+        model_flops=model_flops,
+        hlo_flops_per_dev=an["flops"],
+        n_chips=n_chips,
+    )
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS
+# ---------------------------------------------------------------------------
+
+
+def model_flops(cfg, shape, *, include_backward: Optional[bool] = None
+                ) -> float:
+    """6*N*D for training (fwd 2ND + bwd 4ND); 2*N*D for inference steps.
+
+    N = active params (MoE counts routed experts only); D = tokens processed
+    in the step (decode: one per sequence)."""
+    n_active = cfg.param_counts()["active"]
+    d_tokens = shape.tokens_per_step
+    train = shape.kind == "train" if include_backward is None \
+        else include_backward
+    return (6.0 if train else 2.0) * n_active * d_tokens

@@ -1,0 +1,77 @@
+"""Sampling and generation loops.
+
+`generate` drives models/model.decode_step over a fixed number of tokens
+with per-sequence positions (a (B,) pos vector — sequences at different
+offsets decode in the same batch, the substrate for continuous batching in
+engine.py). The loop is a lax.scan so the whole generation compiles to one
+program (no per-token dispatch overhead).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as MD
+
+
+def sample_logits(key, logits, *, temperature: float = 1.0,
+                  top_k: Optional[int] = None, vocab_size: int = 0):
+    """logits: (B, Vp) f32 -> (B,) int32 tokens."""
+    if vocab_size and logits.shape[-1] > vocab_size:
+        neg = jnp.finfo(jnp.float32).min
+        pad = jnp.arange(logits.shape[-1]) >= vocab_size
+        logits = jnp.where(pad, neg, logits)
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k is not None:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, jnp.finfo(jnp.float32).min, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def generate(params, cfg, cache, first_tokens, start_pos, n_tokens: int, *,
+             key=None, temperature: float = 0.0, top_k: Optional[int] = None,
+             active=None):
+    """Decode n_tokens greedily/sampled.
+
+    first_tokens: (B, 1) int32 — the first input token of each sequence.
+    start_pos: (B,) int32 — absolute position of that token.
+    active: optional (B,) bool — inactive slots keep emitting pad(0) and do
+    not advance their cache (engine slot-masking).
+    Returns (tokens (B, n_tokens), final cache, final pos).
+    """
+    b = first_tokens.shape[0]
+    key = jax.random.key(0) if key is None else key
+    start_pos = jnp.broadcast_to(jnp.asarray(start_pos, jnp.int32), (b,))
+    act = jnp.ones((b,), bool) if active is None else active
+
+    def step(carry, k):
+        cache, tok, pos = carry
+        logits, new_cache = MD.decode_step(params, cfg, cache, tok, pos)
+        nxt = sample_logits(k, logits[:, 0], temperature=temperature,
+                            top_k=top_k, vocab_size=cfg.vocab_size)
+        nxt = jnp.where(act, nxt, 0)
+        # inactive slots: keep old cache values
+        new_cache = jax.tree.map(
+            lambda n, o: jnp.where(
+                act.reshape((1, b) + (1,) * (n.ndim - 2)), n, o),
+            new_cache, cache)
+        return (new_cache, nxt[:, None], pos + act.astype(jnp.int32)), nxt
+
+    keys = jax.random.split(key, n_tokens)
+    (cache, _, pos), toks = jax.lax.scan(
+        step, (cache, first_tokens, start_pos), keys)
+    return toks.T, cache, pos  # (B, n_tokens)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "n_tokens",
+                                             "temperature", "top_k"))
+def jit_generate(params, cfg, cache, first_tokens, start_pos, n_tokens,
+                 key, temperature=0.0, top_k=None):
+    return generate(params, cfg, cache, first_tokens, start_pos, n_tokens,
+                    key=key, temperature=temperature, top_k=top_k)

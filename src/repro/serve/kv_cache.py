@@ -1,0 +1,39 @@
+"""KV / recurrent-state cache utilities for serving.
+
+The cache pytree itself is built by models/transformer.init_cache (stacked
+(n_superlayers, ...) so the decode scan streams it); this module adds the
+serving-side bookkeeping: byte accounting (capacity planning), sharding
+(via parallel/sharding.cache_shardings) and rolling-window semantics notes.
+
+Cache kinds per layer:
+  attn  : k/v (B, S_slots, Hkv, hd). S_slots = min(window, max_len) for
+          sliding-window archs (rolling buffer, slot = pos % W) else max_len.
+  mamba : h (B, d_inner, d_state) f32 + conv tail (B, d_conv-1, d_inner).
+  rwkv  : shift (B, d), s (B, H, hd, hd) f32, shift_c (B, d).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import init_cache  # re-export
+from repro.models.transformer import init_layer_cache  # re-export
+
+__all__ = ["init_cache", "init_layer_cache", "cache_bytes",
+           "cache_bytes_per_token"]
+
+
+def cache_bytes(cache) -> int:
+    """Total bytes of a cache pytree (global, pre-sharding)."""
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+
+
+def cache_bytes_per_token(cfg, dtype=jnp.bfloat16) -> int:
+    """Marginal KV bytes per generated token per sequence (attn layers only;
+    recurrent layers are O(1) in sequence)."""
+    itm = jnp.dtype(dtype).itemsize
+    n_attn = sum(1 for k in cfg.layer_kinds if k == "attn")
+    if cfg.sliding_window is not None:
+        return 0  # rolling buffer: no marginal growth past the window
+    return n_attn * 2 * cfg.n_kv_heads * cfg.head_dim * itm

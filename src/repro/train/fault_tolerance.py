@@ -1,0 +1,183 @@
+"""Fault tolerance: heartbeats, straggler detection, elastic re-planning,
+preemption-safe training loops.
+
+Everything here is deliberately host-side and deterministic so it can be
+unit-tested on CPU and drops onto jax.distributed unchanged: the monitor
+consumes (worker, step, timestamp) events from any transport (here: direct
+calls; in deployment: the coordination service), and the re-planner is a
+pure function from the live-worker set to a new mesh shape + data shards.
+
+Recovery invariant (tested): crash at any step -> restore latest checkpoint
+-> replay remaining batches == bitwise-identical final state, because the
+data pipeline is a pure function of (seed, step) and the train step is
+deterministic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Heartbeats & stragglers
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class WorkerHealth:
+    last_beat: Optional[float] = None
+    last_step: int = -1
+    step_times: deque = dataclasses.field(
+        default_factory=lambda: deque(maxlen=16))
+
+
+class HeartbeatMonitor:
+    """Tracks per-worker liveness and step latency.
+
+    failed(): no heartbeat for `timeout_s`.
+    stragglers(): recent mean step time > `straggler_factor` x fleet median —
+    the mitigation hook re-plans those workers' shards (deterministically)
+    rather than waiting on them.
+    """
+
+    def __init__(self, workers: Sequence[int], *, timeout_s: float = 60.0,
+                 straggler_factor: float = 1.5):
+        self.timeout_s = timeout_s
+        self.straggler_factor = straggler_factor
+        self.health: Dict[int, WorkerHealth] = {
+            w: WorkerHealth() for w in workers}
+
+    def beat(self, worker: int, step: int, now: Optional[float] = None):
+        now = time.monotonic() if now is None else now
+        h = self.health[worker]
+        if h.last_beat is not None and step > h.last_step:
+            h.step_times.append((now - h.last_beat) / max(1, step - h.last_step))
+        h.last_beat, h.last_step = now, step
+
+    def failed(self, now: Optional[float] = None) -> Set[int]:
+        now = time.monotonic() if now is None else now
+        return {w for w, h in self.health.items()
+                if h.last_beat is not None
+                and now - h.last_beat > self.timeout_s}
+
+    def stragglers(self) -> Set[int]:
+        means = {w: sum(h.step_times) / len(h.step_times)
+                 for w, h in self.health.items() if h.step_times}
+        if len(means) < 2:
+            return set()
+        med = sorted(means.values())[len(means) // 2]
+        return {w for w, m in means.items()
+                if m > self.straggler_factor * med}
+
+
+# ---------------------------------------------------------------------------
+# Elastic re-planning
+# ---------------------------------------------------------------------------
+
+
+def replan_mesh(n_chips: int, *, model: int = 16, pod_size: int = 256
+                ) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """Largest usable mesh from n_chips surviving chips.
+
+    Keeps the model (TP) axis intact — parameter shardings stay valid, so
+    elastic restore only re-slices the data axis. Whole lost pods shrink the
+    pod axis; partial losses shrink data. Deterministic in n_chips.
+    """
+    if n_chips < model:
+        # degrade TP to the largest power-of-two divisor that fits
+        while model > 1 and n_chips < model:
+            model //= 2
+    pods = max(1, n_chips // pod_size)
+    per_pod = n_chips // pods
+    data = max(1, per_pod // model)
+    if pods > 1:
+        return (pods, data, model), ("pod", "data", "model")
+    return (data, model), ("data", "model")
+
+
+def shard_assignment(n_shards: int, workers: Sequence[int]) -> Dict[int, List[int]]:
+    """Deterministic round-robin data-shard ownership for the live set."""
+    workers = sorted(workers)
+    out: Dict[int, List[int]] = {w: [] for w in workers}
+    for s in range(n_shards):
+        out[workers[s % len(workers)]].append(s)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Preemption guard
+# ---------------------------------------------------------------------------
+
+
+class PreemptionGuard:
+    """Converts SIGTERM (or a chosen signal) into a checked flag so the
+    training loop can checkpoint-and-exit at a step boundary instead of
+    dying mid-allreduce."""
+
+    def __init__(self, signals=(signal.SIGTERM,)):
+        self._flag = False
+        self._signals = signals
+        self._prev = {}
+
+    def __enter__(self):
+        for s in self._signals:
+            self._prev[s] = signal.signal(s, self._handler)
+        return self
+
+    def __exit__(self, *exc):
+        for s, prev in self._prev.items():
+            signal.signal(s, prev)
+        return False
+
+    def _handler(self, signum, frame):
+        self._flag = True
+
+    @property
+    def preempted(self) -> bool:
+        return self._flag
+
+
+# ---------------------------------------------------------------------------
+# Resumable training loop
+# ---------------------------------------------------------------------------
+
+
+def run_training(state, train_step: Callable, batch_fn: Callable,
+                 n_steps: int, *, manager=None, guard=None,
+                 monitor=None, worker: int = 0,
+                 fail_at: Optional[int] = None) -> Tuple[object, list]:
+    """Drive `train_step` from state.step to n_steps.
+
+    batch_fn(step) -> batch (pure function: restart-safe).
+    manager: CheckpointManager for cadenced saves.
+    fail_at: raise SimulatedFailure before executing that step (tests).
+    Returns (final_state, metrics_log).
+    """
+    log = []
+    step = int(state.step)
+    while step < n_steps:
+        if guard is not None and guard.preempted:
+            if manager is not None:
+                manager.save_sync(state, step)
+            break
+        if fail_at is not None and step == fail_at:
+            raise SimulatedFailure(step)
+        batch = batch_fn(step)
+        state, metrics = train_step(state, batch)
+        step += 1
+        if monitor is not None:
+            monitor.beat(worker, step)
+        log.append({k: float(v) for k, v in metrics.items()})
+        if manager is not None and manager.should_save(step):
+            manager.save_sync(state, step)
+    return state, log
+
+
+class SimulatedFailure(RuntimeError):
+    def __init__(self, step):
+        super().__init__(f"simulated node failure at step {step}")
+        self.step = step

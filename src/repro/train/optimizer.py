@@ -1,0 +1,178 @@
+"""Optimizers: AdamW and Adafactor (factored second moment), pytree-native.
+
+Adafactor matters at scale: for the >=300B assigned archs the AdamW moments
+(2 x 4 bytes/param) dominate per-chip memory; the factored second moment is
+O(rows + cols) and the dry-run memory analysis selects it per-arch (see
+launch/dryrun.py OPT_BY_ARCH).
+
+State layout mirrors the params pytree so parallel/sharding.py rules apply
+to optimizer state unchanged (moments inherit the param's sharding; factored
+row/col stats inherit the reduced-rank prefix).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"  # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    # adafactor
+    decay_exp: float = 0.8  # beta2_t = 1 - t^-0.8
+    clip_threshold: float = 1.0
+
+
+def schedule(opt: OptConfig, step):
+    """Linear warmup -> cosine decay to min_lr_frac. Uses step+1 so the
+    very first update has a non-zero learning rate."""
+    stepf = step.astype(jnp.float32) if hasattr(step, "astype") \
+        else jnp.float32(step)
+    stepf = stepf + 1.0
+    warm = stepf / jnp.maximum(opt.warmup_steps, 1)
+    t = (stepf - opt.warmup_steps) / jnp.maximum(
+        opt.total_steps - opt.warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = opt.min_lr_frac + (1 - opt.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * t))
+    return opt.lr * jnp.where(stepf < opt.warmup_steps, warm, cos)
+
+
+def _decay_mask(path) -> bool:
+    """Weight decay only on >=2-D matmul weights (not norms/biases)."""
+    name = ""
+    for e in reversed(path):
+        if isinstance(e, jax.tree_util.DictKey):
+            name = str(e.key)
+            break
+    return not (name.startswith("norm") or name in
+                ("final_norm", "dt_bias", "d_skip", "w0", "u",
+                 "ln_x_scale", "ln_x_bias"))
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_opt_state(opt: OptConfig, params):
+    if opt.kind == "adamw":
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+        }
+    if opt.kind == "adafactor":
+        def vrow(p):
+            return (jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p.shape)
+                    else jnp.zeros(p.shape, jnp.float32))
+
+        def vcol(p):
+            return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                    if _factored(p.shape) else jnp.zeros((1,), jnp.float32))
+
+        return {
+            "vr": jax.tree.map(vrow, params),
+            "vc": jax.tree.map(vcol, params),
+        }
+    raise ValueError(opt.kind)
+
+
+# ---------------------------------------------------------------------------
+# Updates
+# ---------------------------------------------------------------------------
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-12))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale), grads), g
+
+
+def apply_updates(opt: OptConfig, params, grads, opt_state, step):
+    """Returns (new_params, new_opt_state, metrics). grads any float dtype."""
+    grads, gnorm = clip_by_global_norm(grads, opt.grad_clip)
+    lr = schedule(opt, step)
+    stepf = step.astype(jnp.float32) + 1.0
+
+    if opt.kind == "adamw":
+        b1, b2 = opt.b1, opt.b2
+        bc1 = 1 - b1 ** stepf
+        bc2 = 1 - b2 ** stepf
+
+        def upd(path, p, g, m, v):
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + opt.eps)
+            if _decay_mask(path):
+                u = u + opt.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+        flat = jax.tree_util.tree_map_with_path(
+            upd, params, grads, opt_state["m"], opt_state["v"],
+            is_leaf=lambda x: isinstance(x, jax.Array))
+        new_p = jax.tree.map(lambda t: t[0], flat,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], flat,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], flat,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, {"m": new_m, "v": new_v}, {"lr": lr, "grad_norm": gnorm}
+
+    if opt.kind == "adafactor":
+        b2t = 1.0 - stepf ** (-opt.decay_exp)
+
+        def upd(path, p, g, vr, vc):
+            g2 = g * g + 1e-30
+            if _factored(p.shape):
+                vr = b2t * vr + (1 - b2t) * jnp.mean(g2, axis=-1)
+                vc = b2t * vc + (1 - b2t) * jnp.mean(g2, axis=-2)
+                rfac = vr / jnp.mean(vr, axis=-1, keepdims=True)
+                u = g / (jnp.sqrt(rfac)[..., None] * jnp.sqrt(vc)[..., None, :]
+                         + 1e-30)
+            else:
+                vr = b2t * vr + (1 - b2t) * g2
+                vc = vc
+                u = g / (jnp.sqrt(vr) + 1e-30)
+            # RMS update clipping (Adafactor d=1)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / opt.clip_threshold)
+            if _decay_mask(path):
+                u = u + opt.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), vr, vc
+
+        flat = jax.tree_util.tree_map_with_path(
+            upd, params, grads, opt_state["vr"], opt_state["vc"],
+            is_leaf=lambda x: isinstance(x, jax.Array))
+        new_p = jax.tree.map(lambda t: t[0], flat,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_vr = jax.tree.map(lambda t: t[1], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        new_vc = jax.tree.map(lambda t: t[2], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        return (new_p, {"vr": new_vr, "vc": new_vc},
+                {"lr": lr, "grad_norm": gnorm})
+
+    raise ValueError(opt.kind)

@@ -1,0 +1,12 @@
+"""Shared pytest config. IMPORTANT: do NOT set XLA_FLAGS here — smoke tests
+and benches must see the single real CPU device; only launch/dryrun.py forces
+512 placeholder devices (in its own process)."""
+
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "repro",
+    deadline=None,  # first example pays JIT compile; timings are not the SUT
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("repro")

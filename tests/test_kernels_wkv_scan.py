@@ -1,0 +1,74 @@
+"""Fused WKV6 kernel vs oracle: shape/dtype sweeps (interpret mode), state
+chaining, and equivalence with the model's chunked formulation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.wkv_scan import ops as O
+from repro.kernels.wkv_scan import ref as R
+
+
+def _inputs(key, b, l, h, hd, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (b, l, h, hd), dtype) * 0.5
+    k = jax.random.normal(ks[1], (b, l, h, hd), dtype) * 0.5
+    v = jax.random.normal(ks[2], (b, l, h, hd), dtype) * 0.5
+    lw = -jnp.exp(jax.random.normal(ks[3], (b, l, h, hd), jnp.float32)
+                  * 0.5).astype(dtype)  # log-decay < 0
+    u = jax.random.normal(ks[4], (h, hd), jnp.float32) * 0.5
+    return r, k, v, lw, u
+
+
+@pytest.mark.parametrize("b,l,h,hd", [
+    (1, 8, 1, 8),
+    (2, 32, 4, 16),
+    (2, 64, 2, 64),
+    (1, 128, 8, 32),
+])
+def test_allclose_vs_ref_shapes(b, l, h, hd):
+    r, k, v, lw, u = _inputs(jax.random.key(0), b, l, h, hd)
+    o_k, s_k = O.wkv(r, k, v, lw, u, impl="pallas", block_l=min(16, l))
+    o_r, s_r = R.wkv_ref(r, k, v, lw, u)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_bfloat16():
+    r, k, v, lw, u = _inputs(jax.random.key(1), 2, 32, 2, 16, jnp.bfloat16)
+    o_k, _ = O.wkv(r, k, v, lw, u, impl="pallas", block_l=16)
+    o_r, _ = R.wkv_ref(r, k, v, lw, u)
+    assert o_k.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(o_k, np.float32),
+                               np.asarray(o_r.astype(jnp.float32)),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_state_chaining():
+    r, k, v, lw, u = _inputs(jax.random.key(2), 1, 64, 2, 16)
+    o_full, s_full = O.wkv(r, k, v, lw, u, impl="pallas", block_l=16)
+    o1, s1 = O.wkv(r[:, :32], k[:, :32], v[:, :32], lw[:, :32], u,
+                   impl="pallas", block_l=16)
+    o2, s2 = O.wkv(r[:, 32:], k[:, 32:], v[:, 32:], lw[:, 32:], u, s0=s1,
+                   impl="pallas", block_l=16)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([o1, o2], 1)),
+                               np.asarray(o_full), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_matches_model_chunked_wkv():
+    """kernel == models/rwkv6._wkv_chunk (the exp-argument formulation)."""
+    from repro.models.rwkv6 import _wkv_chunk
+    b, l, h, hd = 2, 32, 2, 16
+    r, k, v, lw, u = _inputs(jax.random.key(3), b, l, h, hd)
+    s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    o_chunk, s_chunk = _wkv_chunk(s0, r, k, v, lw, u)
+    o_k, s_k = O.wkv(r, k, v, lw, u, impl="pallas", block_l=16)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_chunk),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_chunk),
+                               rtol=1e-4, atol=1e-4)

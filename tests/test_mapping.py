@@ -1,0 +1,306 @@
+"""Property + unit tests for the paper's mapping functions (core/mapping.py).
+
+The paper's central correctness claim is that g(lambda) is a bijection from
+[0, T(n)) onto the lower triangle {(i,j): j <= i < n}. We verify it exactly,
+host-side and traced, far beyond the paper's N < 30,720 exactness envelope.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import mapping as M
+from repro.core import schedule as S
+
+
+# ---------------------------------------------------------------------------
+# LTM g(lambda)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(min_value=0, max_value=2**52))
+def test_ltm_host_bijection_roundtrip(lam):
+    i, j = M.ltm_map(lam)
+    assert 0 <= j <= i
+    assert M.ltm_inverse(i, j) == lam
+
+
+# Traced exactness envelope: int32 needs 8*lam+1 and r*r to stay < 2^31,
+# i.e. lam <= T(16383) ~ 1.34e8 (n <= 16383 tiles/side; seq ~2M tokens at
+# rho=128). ~100x beyond the paper's N < 30,720 envelope.
+@given(st.integers(min_value=0, max_value=M.tri(16383) - 1))
+@settings(max_examples=200)
+def test_ltm_traced_matches_host(lam):
+    i_h, j_h = M.ltm_map(lam)
+    i_t, j_t = M.ltm_map(jnp.asarray(lam, jnp.int32))
+    assert (int(i_t), int(j_t)) == (i_h, j_h)
+
+
+def test_ltm_enumerates_lower_triangle_exactly():
+    n = 53
+    seen = {M.ltm_map(l) for l in range(M.tri(n))}
+    expect = {(i, j) for i in range(n) for j in range(i + 1)}
+    assert seen == expect
+
+
+def test_ltm_row_major_contiguity():
+    # The property the flash-attention kernel relies on: for fixed i the
+    # lambdas are contiguous and j ascends 0..i.
+    for i in range(40):
+        lams = [M.ltm_inverse(i, j) for j in range(i + 1)]
+        assert lams == list(range(lams[0], lams[0] + i + 1))
+
+
+def test_ltm_nodiag():
+    n = 30
+    seen = {M.ltm_map_nodiag(l) for l in range(M.tri(n - 1))}
+    expect = {(i, j) for i in range(1, n) for j in range(i)}
+    assert seen == expect
+
+
+@given(st.integers(min_value=0, max_value=M.tri(30720 // 16) - 1))
+@settings(max_examples=300)
+def test_ltm_float_r_exact_in_paper_envelope(lam):
+    """LTM-R (rsqrt + eps) is exact within the paper's N<30,720, rho=16."""
+    i_r, j_r = M.ltm_map_float_r(jnp.asarray(lam))
+    assert (int(i_r), int(j_r)) == M.ltm_map(lam)
+
+
+def test_isqrt_traced_exact_near_squares():
+    xs = []
+    for r in [0, 1, 2, 5, 1000, 20000, 32767]:
+        for d in (-1, 0, 1):
+            v = r * r + d
+            if v >= 0:
+                xs.append(v)
+    xs = jnp.asarray(xs, jnp.int32)
+    got = jax.jit(M.isqrt)(xs)
+    import math
+
+    assert [int(g) for g in got] == [math.isqrt(int(x)) for x in xs]
+
+
+# ---------------------------------------------------------------------------
+# Competitors: UTM, RB, REC, BB
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [2, 3, 7, 16, 33])
+def test_utm_covers_strict_upper_triangle(n):
+    seen = {M.utm_map(k, n) for k in range(M.tri(n - 1))}
+    expect = {(a, b) for a in range(n) for b in range(a + 1, n)}
+    assert seen == expect
+
+
+@given(st.integers(min_value=2, max_value=200), st.data())
+@settings(max_examples=100)
+def test_utm_roundtrip(n, data):
+    k = data.draw(st.integers(min_value=0, max_value=M.tri(n - 1) - 1))
+    a, b = M.utm_map(k, n)
+    assert M.utm_inverse(a, b, n) == k
+
+
+@pytest.mark.parametrize("n", [2, 4, 5, 8, 9, 16, 31])
+def test_rb_covers_lower_triangle(n):
+    sched = S.RBSchedule(n=n)
+    seen = set()
+    for lam in range(sched.num_blocks):
+        if sched.host_active(lam):
+            ij = sched.host_map(lam)
+            assert ij not in seen, f"duplicate {ij}"
+            seen.add(ij)
+    expect = {(i, j) for i in range(n) for j in range(i + 1)}
+    assert seen == expect
+
+
+@pytest.mark.parametrize("n,m", [(4, 1), (8, 2), (16, 4), (32, 4)])
+def test_rec_covers_lower_triangle(n, m):
+    sched = S.RECSchedule(n=n, m=m)
+    seen = sched.enumerate_host()
+    assert len(seen) == len(set(seen)) == M.tri(n)
+    assert set(seen) == {(i, j) for i in range(n) for j in range(i + 1)}
+
+
+def test_rec_rejects_bad_shapes():
+    with pytest.raises(AssertionError):
+        M.rec_schedule(12, 5)
+
+
+# ---------------------------------------------------------------------------
+# Band & prefix schedules (beyond-paper)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,w", [(8, 1), (8, 3), (16, 4), (16, 16), (33, 7)])
+def test_band_covers_band(n, w):
+    sched = S.BandSchedule(n=n, w=w)
+    seen = [sched.host_map(l) for l in range(sched.num_blocks)]
+    assert len(seen) == len(set(seen))
+    expect = {(i, j) for i in range(n) for j in range(max(0, i - w + 1), i + 1)}
+    assert set(seen) == expect
+
+
+@given(
+    st.integers(min_value=1, max_value=300),
+    st.integers(min_value=1, max_value=300),
+    st.data(),
+)
+@settings(max_examples=150)
+def test_band_roundtrip(n, w, data):
+    w = min(w, n)
+    lam = data.draw(st.integers(min_value=0, max_value=M.band_blocks(n, w) - 1))
+    i, j = M.band_map(lam, w)
+    assert max(0, i - w + 1) <= j <= i
+    assert M.band_inverse(i, j, w) == lam
+
+
+def test_band_traced_matches_host():
+    n, w = 50, 9
+    lams = np.arange(M.band_blocks(n, w))
+    it, jt = jax.jit(lambda l: M.band_map(l, w))(jnp.asarray(lams))
+    host = [M.band_map(int(l), w) for l in lams]
+    np.testing.assert_array_equal(np.asarray(it), [h[0] for h in host])
+    np.testing.assert_array_equal(np.asarray(jt), [h[1] for h in host])
+
+
+@pytest.mark.parametrize("n,p", [(8, 1), (8, 3), (16, 5), (9, 9)])
+def test_prefix_covers_prefix_causal(n, p):
+    sched = S.PrefixSchedule(n=n, p=p)
+    seen = [sched.host_map(l) for l in range(sched.num_blocks)]
+    assert len(seen) == len(set(seen))
+    expect = {(i, j) for i in range(n) for j in range(n) if j <= i or j < p}
+    assert set(seen) == expect
+
+
+# ---------------------------------------------------------------------------
+# Waste accounting (paper Fig. 3 right / §II)
+# ---------------------------------------------------------------------------
+
+
+def test_strategy_stats_match_paper_claims():
+    from repro.core import analysis as A
+
+    n = 64
+    stats = A.strategy_stats(n, band_w=8, rec_m=1)
+    assert stats["bb"].wasted == M.tri(n - 1) == n * (n - 1) // 2  # O(n^2)
+    assert stats["ltm"].wasted == 0  # block-level: only intra-diag masking
+    assert stats["ltm"].launched == M.tri(n)
+    assert abs(stats["bb"].block_ratio_vs_bb - 1.0) < 1e-9
+    # paper: I -> 2 for large n at k=1
+    assert 1.9 < stats["ltm"].block_ratio_vs_bb < 2.0
+    assert stats["rb"].launched <= M.tri(n) + n + 1  # O(n) overhead
+    assert stats["rec"].launched == M.tri(n)
+
+
+def test_improvement_factor_model():
+    from repro.core import analysis as A
+
+    # paper: k in [1.5, 2) -> I in (1, 1.33]; k >= 2 -> no improvement
+    assert 1.0 < A.improvement_factor(1000, k_cost=1.74) < 1.33
+    assert A.improvement_factor(1000, k_cost=2.1) < 1.0
+    assert 1.99 < A.improvement_factor(10000, k_cost=1.0) < 2.0
+
+
+# ---------------------------------------------------------------------------
+# Schedules: traced index_map == host_map for every schedule kind
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind,kw", [
+    ("ltm", {}),
+    ("bb", {}),
+    ("band", {"w": 5}),
+    ("prefix", {"p": 3}),
+    ("utm", {}),
+    ("rb", {}),
+])
+def test_traced_index_map_matches_host(kind, kw):
+    n = 17
+    sched = S.make_schedule(kind, n, **kw)
+    lams = jnp.arange(sched.num_blocks)
+    it, jt = jax.jit(jax.vmap(sched.index_map))(lams)
+    for l in range(sched.num_blocks):
+        assert (int(it[l]), int(jt[l])) == tuple(sched.host_map(l)), (kind, l)
+
+
+# ---------------------------------------------------------------------------
+# Column-major maps (backward-pass enumerations)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 8, 17, 64])
+def test_cm_map_covers_lower_triangle_col_major(n):
+    seen = [M.cm_map(l, n) for l in range(M.tri(n))]
+    assert len(set(seen)) == M.tri(n)
+    # column-major: j non-decreasing, i contiguous within a column
+    js = [j for _, j in seen]
+    assert js == sorted(js)
+    for l, (i, j) in enumerate(seen):
+        assert j <= i < n
+        assert M.cm_inverse(i, j, n) == l
+
+
+@given(st.integers(min_value=1, max_value=3000), st.data())
+@settings(max_examples=100)
+def test_cm_roundtrip(n, data):
+    lam = data.draw(st.integers(min_value=0, max_value=M.tri(n) - 1))
+    i, j = M.cm_map(lam, n)
+    assert M.cm_inverse(i, j, n) == lam
+
+
+def test_cm_traced_matches_host():
+    n = 37
+    lams = jnp.arange(M.tri(n))
+    it, jt = jax.jit(jax.vmap(lambda l: M.cm_map(l, n)))(lams)
+    for l in range(M.tri(n)):
+        assert (int(it[l]), int(jt[l])) == M.cm_map(l, n)
+
+
+@pytest.mark.parametrize("n,w", [(8, 1), (8, 3), (16, 4), (16, 16), (33, 7), (5, 5)])
+def test_band_cm_covers_band_col_major(n, w):
+    total = M.band_blocks(n, w)
+    seen = [M.band_cm_map(l, n, w) for l in range(total)]
+    assert len(set(seen)) == total
+    js = [j for _, j in seen]
+    assert js == sorted(js)  # column-major order
+    expect = {(i, j) for i in range(n) for j in range(max(0, i - w + 1), i + 1)}
+    assert set(seen) == expect
+    # contiguous i within each column
+    from itertools import groupby
+
+    idx = 0
+    for j, grp in groupby(seen, key=lambda t: t[1]):
+        rows = [i for i, _ in grp]
+        assert rows == list(range(rows[0], rows[0] + len(rows)))
+
+
+def test_band_cm_traced_matches_host():
+    n, w = 21, 6
+    total = M.band_blocks(n, w)
+    lams = jnp.arange(total)
+    it, jt = jax.jit(jax.vmap(lambda l: M.band_cm_map(l, n, w)))(lams)
+    for l in range(total):
+        assert (int(it[l]), int(jt[l])) == M.band_cm_map(l, n, w)
+
+
+@pytest.mark.parametrize("n,p", [(8, 1), (8, 3), (16, 5), (9, 9), (6, 0)])
+def test_prefix_cm_covers_domain(n, p):
+    total = M.prefix_full_blocks(n, p)
+    seen = [M.prefix_cm_map(l, n, p) for l in range(total)]
+    assert len(set(seen)) == total
+    expect = {(i, j) for i in range(n) for j in range(n) if j <= i or j < p}
+    assert set(seen) == expect
+    js = [j for _, j in seen]
+    assert js == sorted(js)
+
+
+def test_prefix_cm_traced_matches_host():
+    n, p = 13, 4
+    total = M.prefix_full_blocks(n, p)
+    lams = jnp.arange(total)
+    it, jt = jax.jit(jax.vmap(lambda l: M.prefix_cm_map(l, n, p)))(lams)
+    for l in range(total):
+        assert (int(it[l]), int(jt[l])) == M.prefix_cm_map(l, n, p)

@@ -1,0 +1,136 @@
+"""Training substrate tests: optimizers, microbatch-accumulation
+equivalence, data determinism, loss decrease."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.configs import registry as REG
+from repro.configs.base import ShapeConfig
+from repro.train import data as DATA
+from repro.train import optimizer as OPT
+from repro.train import train_step as TS
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["adamw", "adafactor"])
+def test_optimizer_minimizes_quadratic(kind):
+    opt = OPT.OptConfig(kind=kind, lr=0.1, weight_decay=0.0,
+                        warmup_steps=0, total_steps=200, min_lr_frac=1.0)
+    params = {"w": jnp.array([[3.0, -2.0], [1.5, 4.0]])}
+    state = OPT.init_opt_state(opt, params)
+    step = jnp.zeros((), jnp.int32)
+    for i in range(150):
+        grads = jax.tree.map(lambda p: 2 * p, params)  # d/dp |p|^2
+        params, state, _ = OPT.apply_updates(opt, params, grads, state, step)
+        step = step + 1
+    assert float(jnp.abs(params["w"]).max()) < 0.1, kind
+
+
+def test_adafactor_state_is_factored():
+    opt = OPT.OptConfig(kind="adafactor")
+    params = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((64,))}
+    s = OPT.init_opt_state(opt, params)
+    assert s["vr"]["w"].shape == (64,)
+    assert s["vc"]["w"].shape == (32,)
+    assert s["vr"]["b"].shape == (64,)  # unfactored 1-D
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((10,), 100.0)}
+    clipped, norm = OPT.clip_by_global_norm(g, 1.0)
+    assert float(norm) > 100
+    assert abs(float(OPT.global_norm(clipped)) - 1.0) < 1e-5
+
+
+@given(st.integers(0, 10_000))
+def test_schedule_bounds(step):
+    opt = OPT.OptConfig(lr=1e-3, warmup_steps=100, total_steps=10_000,
+                        min_lr_frac=0.1)
+    lr = float(OPT.schedule(opt, jnp.int32(step)))
+    assert 0.0 <= lr <= opt.lr + 1e-9
+    if step >= 100:
+        assert lr >= opt.lr * opt.min_lr_frac - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Microbatch accumulation == single batch
+# ---------------------------------------------------------------------------
+
+
+def test_microbatch_equivalence():
+    cfg = REG.smoke_config("yi-9b")
+    opt = OPT.OptConfig(lr=1e-3, warmup_steps=0, total_steps=10)
+    state1 = TS.init_state(jax.random.key(0), cfg, opt)
+    state4 = jax.tree.map(lambda x: x, state1)  # copy
+
+    shape = ShapeConfig("t", 32, 8, "train")
+    batch = DATA.SyntheticLM(cfg, shape, act_dtype=jnp.float32).batch(0)
+
+    s1, m1 = TS.make_train_step(cfg, opt, microbatches=1)(state1, batch)
+    s4, m4 = TS.make_train_step(cfg, opt, microbatches=4)(state4, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                               rtol=1e-4)
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s4.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_data_deterministic_per_step():
+    cfg = REG.smoke_config("yi-9b")
+    shape = ShapeConfig("t", 64, 4, "train")
+    ds1 = DATA.SyntheticLM(cfg, shape, seed=3)
+    ds2 = DATA.SyntheticLM(cfg, shape, seed=3)
+    b1, b2 = ds1.batch(17), ds2.batch(17)
+    assert jnp.array_equal(b1["tokens"], b2["tokens"])
+    assert not jnp.array_equal(ds1.batch(18)["tokens"], b1["tokens"])
+
+
+def test_data_labels_are_shifted_tokens():
+    cfg = REG.smoke_config("yi-9b")
+    shape = ShapeConfig("t", 64, 2, "train")
+    b = DATA.SyntheticLM(cfg, shape).batch(0)
+    assert jnp.array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_data_vlm_mask_zeroes_prefix():
+    cfg = REG.smoke_config("internvl2-1b")
+    shape = ShapeConfig("t", 64, 2, "train")
+    b = DATA.SyntheticLM(cfg, shape).batch(0)
+    p = cfg.n_patches
+    assert b["embeds"].shape == (2, p, cfg.d_model)
+    assert b["tokens"].shape == (2, 64 - p)
+    assert float(b["mask"][:, :p].sum()) == 0.0
+    assert float(b["mask"][:, p:].min()) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Short training run drops the loss (system-level sanity)
+# ---------------------------------------------------------------------------
+
+
+def test_loss_decreases_20_steps():
+    cfg = REG.smoke_config("granite-34b")
+    opt = OPT.OptConfig(lr=3e-3, warmup_steps=2, total_steps=20)
+    state = TS.init_state(jax.random.key(0), cfg, opt)
+    shape = ShapeConfig("t", 64, 4, "train")
+    ds = DATA.SyntheticLM(cfg, shape, act_dtype=jnp.float32)
+    step = jax.jit(TS.make_train_step(cfg, opt), donate_argnums=(0,))
+    losses = []
+    for i in range(20):
+        state, metrics = step(state, ds.batch(i))
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses
