@@ -1,0 +1,18 @@
+"""Shared benchmark helpers."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def best_of(fn, *args, reps: int = 3):
+    """Best-of-N wall-clock of fn(*args); first call pays JIT compile."""
+    fn(*args)  # compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best

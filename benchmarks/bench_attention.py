@@ -17,24 +17,16 @@ PrefixSchedule (VLM) domains.
 from __future__ import annotations
 
 import json
-import time
 
 import jax
 import jax.numpy as jnp
 
+from benchmarks._util import best_of as _time
 from repro.core import mapping as M
 from repro.kernels.tri_attn import ops as AO
 from repro.roofline import hlo_parse as H
 
 
-def _time(fn, *args, reps: int = 3):
-    fn(*args)
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        best = min(best, time.perf_counter() - t0)
-    return best
 
 
 def _flops(fn, *args) -> float:

@@ -10,26 +10,18 @@ GPU-specific effects. Numerics are validated against the O(N^2) oracle.
 from __future__ import annotations
 
 import json
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._util import best_of as _time
 from repro.kernels.tri_edm import ops as E
 from repro.kernels.tri_edm import ref as R
 
 BLOCK = 64
 
 
-def _time(fn, reps: int = 3):
-    fn()
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn())
-        best = min(best, time.perf_counter() - t0)
-    return best
 
 
 def run(n_values=(1024, 2048, 4096), features=(1, 2, 3, 4),

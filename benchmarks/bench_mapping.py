@@ -14,26 +14,18 @@ are reproduced as: exact integer-corrected sqrt (ours), float rsqrt + eps
 from __future__ import annotations
 
 import json
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._util import best_of as _time
 from repro.core import analysis as A
 from repro.core import mapping as M
 
 RHO = 16  # paper blocksize 16x16
 
 
-def _time(fn, *args, reps: int = 3):
-    fn(*args)  # compile
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        best = min(best, time.perf_counter() - t0)
-    return best
 
 
 @jax.jit

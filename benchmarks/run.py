@@ -2,10 +2,11 @@
 
   PYTHONPATH=src python -m benchmarks.run [--fast]
 
-  bench_mapping   — paper Fig. 3 (dummy kernel / strategy cost + waste)
-  bench_edm       — paper Fig. 5 (EDM, d = 1..4 features, LTM vs BB)
-  bench_attention — the technique on causal flash attention (tiles/FLOPs/I)
-  bench_roofline  — §Roofline table from the dry-run artifacts (if present)
+  bench_mapping     — paper Fig. 3 (dummy kernel / strategy cost + waste)
+  bench_tet_mapping — the 3D analogue: BB-3D (n^3) vs tetrahedral launch
+  bench_edm         — paper Fig. 5 (EDM, d = 1..4 features, LTM vs BB)
+  bench_attention   — the technique on causal flash attention (tiles/FLOPs/I)
+  bench_roofline    — §Roofline table from the dry-run artifacts (if present)
 """
 
 from __future__ import annotations
@@ -22,8 +23,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
     os.makedirs("artifacts", exist_ok=True)
 
-    from benchmarks import bench_mapping, bench_edm, bench_attention, \
-        bench_roofline
+    from benchmarks import bench_mapping, bench_tet_mapping, bench_edm, \
+        bench_attention, bench_roofline
 
     t0 = time.time()
     print("=" * 72)
@@ -39,6 +40,18 @@ def main(argv=None):
               f" ltm={r['blocks']['ltm']['wasted']}")
     print("  LTM-R exactness:", bench_mapping.exactness_check(
         1024 if args.fast else 4096))
+
+    print("=" * 72)
+    print("bench_tet_mapping (BB-3D vs tetrahedral launch)")
+    print("=" * 72)
+    rows = bench_tet_mapping.run(
+        n_values=[16, 64] if args.fast else None,
+        out_path="artifacts/bench_tet_mapping.json")
+    for r in rows:
+        print(f"  N={r['N']:6d} tet={r['launched_tet']} "
+              f"bb3={r['launched_bb3']} "
+              f"waste={100 * r['waste_fraction_bb3']:.1f}% "
+              f"I(map)={r['improvement_I_vs_bb3']:.3f}")
 
     print("=" * 72)
     print("bench_edm (paper Fig. 5)")

@@ -1,0 +1,56 @@
+"""Tetrahedral block-space demo: 3-body interactions with tet(n) launches.
+
+The 2D paper maps a 1-D grid onto the triangle of unique PAIRS; one
+dimension up, the unique TRIPLES of tiles form a discrete tetrahedron
+{(i,j,k): k <= j <= i < n}. A 3D bounding box launches n^3 tile-triples
+and wastes ~5/6 of them; tet_map launches exactly n(n+1)(n+2)/6 and, with
+multiset permutation weights, reproduces the full symmetric 3-body sum bit
+for bit of algebra (to f32 roundoff).
+
+  PYTHONPATH=src python examples/tet_3body.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mapping as M
+from repro.core import schedule as S
+from repro.kernels.tri_3body import ops as OPS
+from repro.kernels.tri_3body import ref as REF
+
+
+def main():
+    n_rows, block, d = 32, 8, 3
+    n = n_rows // block
+    x = jax.random.normal(jax.random.key(0), (n_rows, d), jnp.float32)
+
+    # 1. launch-space accounting
+    sched = S.TetrahedralSchedule(n=n)
+    bb3 = S.Dense3DSchedule(n=n)
+    print(f"tiles/side n={n}: tetrahedral launches {sched.num_blocks}, "
+          f"BB-3D launches {bb3.num_blocks} "
+          f"({100 * bb3.waste_fraction:.1f}% waste)")
+
+    # 2. packed per-triple reductions via the Pallas tet kernel
+    packed = OPS.three_body(x, block, impl="pallas")
+    print(f"packed output: {packed.shape} (one reduction per unique "
+          f"(i,j,k) tile triple)")
+
+    # 3. first few triples with their map
+    for lam in range(4):
+        i, j, k = M.tet_map(lam)
+        print(f"  lambda={lam} -> (i,j,k)=({i},{j},{k})  "
+              f"s={float(packed[lam, 0]):+.3f}")
+
+    # 4. exactness: weighted unique-tile total == dense einsum over all
+    #    n_rows^3 ordered point triples
+    total = float(OPS.three_body_total(x, block, impl="pallas"))
+    dense = float(REF.three_body_total_ref(x))
+    print(f"weighted total {total:.4f} vs dense einsum {dense:.4f}")
+    np.testing.assert_allclose(total, dense, rtol=1e-5)
+    print("OK: tet(n) launches reproduce the full 3-body sum")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""pytest plugin: forbid outbound network connections during the suite.
+
+Loaded by scripts/check.sh via ``-p _offline_guard``. The tier-1 suite
+must collect and pass fully offline (the offline-test compat policy —
+see tests/conftest.py); this guard turns any accidental network
+dependency (package download, dataset fetch, telemetry) into a hard,
+attributable failure instead of a hang or a silently-skipped test.
+
+Loopback and AF_UNIX are allowed: local subprocess plumbing is not
+network access.
+"""
+
+from __future__ import annotations
+
+import socket
+
+_LOCAL_HOSTS = {"localhost", "127.0.0.1", "::1", ""}
+_real_connect = socket.socket.connect
+_real_connect_ex = socket.socket.connect_ex
+_real_sendto = socket.socket.sendto
+_real_getaddrinfo = socket.getaddrinfo
+
+
+class OfflineViolation(OSError):
+    pass
+
+
+def _is_local(address) -> bool:
+    host = address[0] if isinstance(address, tuple) and address else address
+    if isinstance(host, (bytes, bytearray)):
+        host = host.decode("utf-8", "replace")
+    return host is None or (isinstance(host, str)
+                            and host.split("%")[0] in _LOCAL_HOSTS)
+
+
+def _violation(what, address):
+    raise OfflineViolation(
+        f"offline CI guard: outbound {what} to {address!r} is forbidden "
+        f"(the suite must run without network; see scripts/check.sh)")
+
+
+def _guarded_connect(self, address):
+    if self.family == getattr(socket, "AF_UNIX", object()) \
+            or _is_local(address):
+        return _real_connect(self, address)
+    _violation("connection", address)
+
+
+def _guarded_connect_ex(self, address):
+    if self.family == getattr(socket, "AF_UNIX", object()) \
+            or _is_local(address):
+        return _real_connect_ex(self, address)
+    _violation("connection (connect_ex)", address)
+
+
+def _guarded_sendto(self, *args):
+    # sendto(data, address) or sendto(data, flags, address)
+    address = args[-1] if args else None
+    if self.family == getattr(socket, "AF_UNIX", object()) \
+            or _is_local(address):
+        return _real_sendto(self, *args)
+    _violation("datagram (sendto)", address)
+
+
+def _guarded_getaddrinfo(host, *args, **kwargs):
+    if _is_local(host):
+        return _real_getaddrinfo(host, *args, **kwargs)
+    _violation("name resolution (getaddrinfo)", host)
+
+
+def pytest_configure(config):
+    socket.socket.connect = _guarded_connect
+    socket.socket.connect_ex = _guarded_connect_ex
+    socket.socket.sendto = _guarded_sendto
+    socket.getaddrinfo = _guarded_getaddrinfo
+
+
+def pytest_unconfigure(config):
+    socket.socket.connect = _real_connect
+    socket.socket.connect_ex = _real_connect_ex
+    socket.socket.sendto = _real_sendto
+    socket.getaddrinfo = _real_getaddrinfo

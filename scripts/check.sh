@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 verification, exactly as the roadmap specifies, plus the offline
+# guard: the suite must collect and pass with no network and no optional
+# deps (hypothesis is shimmed by tests/_hypo_compat.py when absent).
+#
+#   scripts/check.sh            # tier-1 + no-network guard
+#   scripts/check.sh -k tet     # extra args forwarded to pytest
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src:scripts${PYTHONPATH:+:$PYTHONPATH}"
+
+# -p _offline_guard turns any outbound connection attempt into a failure,
+# so offline-collectability cannot regress silently.
+python -m pytest -x -q -p _offline_guard "$@"

@@ -19,6 +19,30 @@ Exactness: the paper's LTM-R uses ``x*rsqrtf(x) + eps`` and is exact only for
 we use float sqrt followed by <=2 integer corrections (the paper's own
 "e <= 1 fixable by conditionals" observation), which is exact for all
 ``lam < 2**52`` host-side and ``lam < 2**31`` traced (int32 grid indices).
+
+The 2D/3D map zoo
+-----------------
+Row-major lower-triangle maps (launch-index -> tile coords):
+  ``ltm_map``        g(lambda) -> (i, j), diagonal included  (paper eq. 2)
+  ``ltm_map_nodiag`` strictly-lower variant                  (paper eq. 10)
+  ``band_map``       sliding-window trapezoid (beyond-paper)
+  ``prefix_full_map`` causal triangle + bidirectional prefix rectangle
+  ``tet_map``        lambda -> (i, j, k) over the discrete TETRAHEDRON
+                     ``0 <= k <= j <= i < n`` (3D simplex; beyond-paper,
+                     after Navarro et al. arXiv 1606.08881 / 1610.07394).
+                     BB-3D waste grows O(n^3) so the exact map pays off
+                     even more than in 2D.
+Column-major variants (backward-pass enumerations): ``cm_map``,
+``band_cm_map``, ``prefix_cm_map``.
+Competitors at block level: ``utm_map`` (Avril), ``rb_map`` (Jung fold),
+``rec_schedule`` (Ries recursive), ``bb_map`` (bounding box).
+
+The 3D row-finder uses the same repair pattern as ``_isqrt_traced``: a
+float32 ``cbrt`` candidate followed by <=2 integer corrections in each
+direction (overflow-clamped probes). Traced exactness envelope: int32
+intermediates of ``tet(i) = tri(i)*(i+2)/3`` fit below 2**31 for
+``i <= 1624``, so the map is exact for planes ``i <= 1623``
+(``lam < tet(1624) ~ 7.15e8``); host ints are exact unboundedly.
 """
 
 from __future__ import annotations
@@ -64,6 +88,41 @@ def wasted_blocks_ltm(n: int) -> int:
     stay integer, matching the paper's O(n) claim).
     """
     return n
+
+
+# ---------------------------------------------------------------------------
+# Tetrahedral numbers (3D simplex)
+# ---------------------------------------------------------------------------
+
+
+def tet(i):
+    """T3(i) = i(i+1)(i+2)/6, the i-th tetrahedral number (traced or host).
+
+    Computed as (tri(i) * (i+2)) // 3 — each division is exact (i(i+1)/2 is
+    an integer; i(i+1)(i+2)/2 is divisible by 3 since one of three
+    consecutive integers is) and the int32 intermediate tri(i)*(i+2) stays
+    below 2**31 for i <= 1624, the traced exactness envelope.
+    """
+    return (tri(i) * (i + 2)) // 3
+
+
+def tet_blocks(n: int) -> int:
+    """Blocks the tetrahedral map launches: exactly the domain size."""
+    return tet(n)
+
+
+def bb3_blocks(n: int) -> int:
+    """Blocks the 3D bounding-box strategy launches (full n^3 cube)."""
+    return n * n * n
+
+
+def wasted_blocks_bb3(n: int) -> int:
+    """BB-3D waste: n^3 - n(n+1)(n+2)/6 -> (5/6) n^3, i.e. O(n^3).
+
+    In 2D the bounding box wastes ~half the launch; in 3D it wastes ~5/6 of
+    it, which is why the exact simplex map pays off even more here.
+    """
+    return n * n * n - tet(n)
 
 
 # ---------------------------------------------------------------------------
@@ -150,6 +209,91 @@ def ltm_map_float_r(lam, eps: float = 1e-4):
 
 def jax_rsqrt(x: Array) -> Array:
     return jnp.asarray(1.0, x.dtype) / jnp.sqrt(x)  # lowered to rsqrt on TPU
+
+
+# ---------------------------------------------------------------------------
+# TET — tetrahedral map over the discrete 3D simplex (beyond-paper)
+# ---------------------------------------------------------------------------
+#
+# Domain: {(i, j, k): 0 <= k <= j <= i < n}, |domain| = tet(n).
+# Enumeration is "row-major" in the outermost coordinate: all tiles of
+# plane i precede plane i+1, and within plane i the (j, k) sub-triangle is
+# enumerated by g(mu) with mu = lam - tet(i). Hence
+#     lam = tet(i) + tri(j) + k.
+# Plane boundaries are contiguous (lam in [tet(i), tet(i+1))), the property
+# per-plane accumulation kernels rely on — the 3D analogue of LTM's
+# row-major contiguity.
+
+
+# Largest argument whose tet() int32 intermediate tri(i)*(i+2) fits in 2**31.
+# Correction probes clamp here, so the traced map is exact for planes
+# i <= 1623, i.e. lam < tet(1624) = 715,169,000.
+_TET_TRACED_MAX_I = 1624
+
+
+def _tet_row_traced(lam: Array) -> Array:
+    """Largest i with tet(i) <= lam, traced (the 3D analogue of the sqrt
+    row-finder).
+
+    float32 cbrt(6 lam) gives a candidate within +1 of the true plane over
+    the whole int32 envelope (measured exhaustively at plane boundaries up
+    to i = 1623); two branch-free corrections in each direction make it
+    exact with margin, mirroring ``_isqrt_traced``. Probe arguments are
+    clamped to _TET_TRACED_MAX_I so the repair itself cannot overflow.
+    """
+    probe = lambda x: tet(jnp.minimum(x, _TET_TRACED_MAX_I))
+    c = jnp.floor(jnp.cbrt(6.0 * lam.astype(jnp.float32))).astype(lam.dtype)
+    c = jnp.where(probe(c + 1) <= lam, c + 1, c)
+    c = jnp.where(probe(c + 1) <= lam, c + 1, c)
+    c = jnp.where(probe(c) > lam, c - 1, c)
+    c = jnp.where(probe(c) > lam, c - 1, c)
+    return jnp.minimum(c, _TET_TRACED_MAX_I - 1)
+
+
+def tet_map(lam):
+    """lambda -> (i, j, k) over the discrete tetrahedron k <= j <= i < n.
+
+    i = the unique plane with tet(i) <= lam < tet(i+1), found by
+    integer-corrected cube root; (j, k) = g(lam - tet(i)) reuses the 2D map.
+    Exact: host unboundedly (python ints), traced for planes i <= 1623
+    (lam < tet(1624) ~ 7.15e8, int32).
+    """
+    if isinstance(lam, (int, np.integer)):
+        lam = int(lam)
+        # host: float cbrt seeds, integer loop repairs (exact for any lam)
+        i = round((6 * lam) ** (1.0 / 3.0))
+        while tet(i + 1) <= lam:
+            i += 1
+        while i > 0 and tet(i) > lam:
+            i -= 1
+        j, k = ltm_map(lam - tet(i))
+        return i, j, k
+    lam = lam.astype(jnp.int32) if lam.dtype not in (jnp.int32, jnp.int64) else lam
+    i = _tet_row_traced(lam)
+    j, k = ltm_map(lam - tet(i))
+    return i, j, k
+
+
+def tet_inverse(i, j, k):
+    """(i, j, k) -> lambda for the plane-major tetrahedral enumeration."""
+    return tet(i) + tri(j) + k
+
+
+def bb3_map(lam, n):
+    """BB-3D: row-major linear index over the full n^3 cube -> (i, j, k).
+
+    The 3D bounding-box baseline's decode (traced or host); the single
+    definition shared by Dense3DSchedule, the bb3 scan baseline, and the
+    benchmarks. Block (i,j,k) is useful iff k <= j <= i (see bb3_active).
+    """
+    return lam // (n * n), (lam // n) % n, lam % n
+
+
+def bb3_active(i, j, k):
+    """Whether a BB-3D block lies inside the simplex (traced or host)."""
+    if isinstance(i, (int, np.integer)):
+        return k <= j <= i
+    return (k <= j) & (j <= i)
 
 
 # ---------------------------------------------------------------------------
@@ -244,12 +388,12 @@ def rb_valid(x, y, n):
 
 def rec_levels(n: int, m: int) -> int:
     """n = m * 2**k; returns k (requires n divisible by m and n/m a pow2)."""
-    q, k = n // m, 0
-    assert m * (1 << int(math.log2(max(q, 1)))) == n or q * m == n
-    while (1 << k) < q:
-        k += 1
-    assert m * (1 << k) == n, f"REC needs n = m*2^k, got n={n} m={m}"
-    return k
+    assert m >= 1 and n >= m and n % m == 0, (
+        f"REC needs n = m*2^k with m >= 1, got n={n} m={m}")
+    q = n // m
+    assert q & (q - 1) == 0, (
+        f"REC needs n = m*2^k, got n={n} m={m} (n/m={q} is not a power of 2)")
+    return q.bit_length() - 1
 
 
 def rec_schedule(n: int, m: int):

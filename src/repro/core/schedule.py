@@ -1,28 +1,39 @@
 """BlockSchedule — the space-of-computation abstraction.
 
-A BlockSchedule describes how a 1-D (or 2-D) launch grid covers a 2-D tile
-domain. It is the framework-level generalization of the paper's g(lambda):
-every schedule exposes
+A BlockSchedule describes how a 1-D (or multi-D) launch grid covers a tile
+domain of ``rank`` dimensions (2 for triangles, 3 for tetrahedra). It is
+the framework-level generalization of the paper's g(lambda): every schedule
+exposes
 
   * ``num_blocks``        — grid size actually launched,
-  * ``index_map(lam)``    — traced lambda -> (i, j) tile coordinates,
+  * ``index_map(lam)``    — traced lambda -> tile coordinates (rank-tuple),
   * ``host_map(lam)``     — same, eager python ints (for tests/analysis),
   * ``domain_blocks``     — number of *useful* tiles,
-  * ``row_start(lam)``    — traced predicate: is this the first tile of an
-                            accumulation row (flash-attention state reset)?
-  * ``row_end(lam)``      — traced predicate: last tile of the row (emit).
+  * ``seg_start(lam)``    — traced predicate: first tile of the contiguous
+                            run sharing the outermost coordinate (a *row*
+                            in 2D, a *plane* in 3D) — accumulator reset,
+  * ``seg_end(lam)``      — traced predicate: last tile of that run (emit).
+
+Segment bookkeeping is shared between 2D and 3D through
+``segment_origin(i)`` (lambda of the first tile of outer coordinate i);
+it is the ONLY row/plane mechanism — kernels needing "last useful tile of
+a causal row" derive it from index_map directly.
 
 Schedules provided:
   TriangularSchedule  — the paper's LTM (diagonal included), O(n) waste -> 0.
+  TetrahedralSchedule — 3D simplex k <= j <= i (beyond-paper; Navarro et
+                        al. arXiv 1606.08881): tet(n) tiles vs BB-3D's n^3.
   DenseSchedule       — BB baseline (2-D bounding box linearized row-major).
+  Dense3DSchedule     — BB-3D baseline (full n^3 cube, simplex guard).
   BandSchedule        — sliding-window trapezoid (beyond-paper).
   PrefixSchedule      — prefix-causal (VLM image prefix; beyond-paper).
   UTMSchedule         — Avril-style upper-tri map at *block* level (competitor).
   RBSchedule          — Jung rectangular fold (competitor).
   RECSchedule         — Ries recursive partition (competitor, multi-pass).
 
-All maps are exact (integer-corrected sqrt), cost O(1) scalar work per grid
-step, and are evaluated on the TPU scalar core inside Pallas index_maps.
+All maps are exact (integer-corrected sqrt/cbrt), cost O(1) scalar work per
+grid step, and are evaluated on the TPU scalar core inside Pallas
+index_maps.
 """
 
 from __future__ import annotations
@@ -37,9 +48,11 @@ from repro.core import mapping as M
 
 @dataclasses.dataclass(frozen=True)
 class BlockSchedule:
-    """Base: dense row-major lower-triangle-aware schedule over n x n tiles."""
+    """Base: dense row-major simplex-aware schedule over n-per-side tiles."""
 
-    n: int  # tiles per side of the (square) bounding box
+    n: int  # tiles per side of the (square/cubic) bounding box
+
+    rank = 2  # coordinates returned by index_map (2 = (i,j), 3 = (i,j,k))
 
     # -- interface -----------------------------------------------------------
     @property
@@ -53,26 +66,33 @@ class BlockSchedule:
     def index_map(self, lam):
         raise NotImplementedError
 
-    def host_map(self, lam: int) -> Tuple[int, int]:
+    def host_map(self, lam: int) -> Tuple[int, ...]:
         raise NotImplementedError
 
-    # flash-attention row bookkeeping (default: derive from host semantics)
-    def row_start(self, lam):
-        i, j = self.index_map(lam)
-        return j == self.row_first_col(i)
+    # -- segment bookkeeping (shared 2D/3D) ----------------------------------
+    # A *segment* is the contiguous lambda-run of tiles sharing the
+    # outermost coordinate: a row in 2D, a plane in 3D. Kernels use
+    # seg_start to reset accumulators and seg_end to emit (flash-attention
+    # online state, per-plane 3-body reductions). Schedules whose
+    # enumeration is segment-contiguous implement ``segment_origin``; the
+    # predicates below then work both traced and host.
+    def segment_origin(self, i):
+        """lambda of the first tile whose outermost coordinate is i."""
+        raise NotImplementedError
 
-    def row_end(self, lam):
-        i, j = self.index_map(lam)
-        return j == i  # causal: last column of row i is the diagonal
+    def seg_start(self, lam):
+        i = self.index_map(lam)[0]
+        return lam == self.segment_origin(i)
 
-    def row_first_col(self, i):
-        return jnp.zeros_like(i) if not isinstance(i, int) else 0
+    def seg_end(self, lam):
+        i = self.index_map(lam)[0]
+        return lam == self.segment_origin(i + 1) - 1
 
     @property
     def waste_fraction(self) -> float:
         return 1.0 - self.domain_blocks / max(self.num_blocks, 1)
 
-    def enumerate_host(self) -> List[Tuple[int, int]]:
+    def enumerate_host(self) -> List[Tuple[int, ...]]:
         return [self.host_map(l) for l in range(self.num_blocks)]
 
 
@@ -103,6 +123,70 @@ class TriangularSchedule(BlockSchedule):
             else M.ltm_map_nodiag(int(lam))
         )
 
+    def segment_origin(self, i):
+        return M.tri(i) if self.include_diagonal else M.tri(i - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class TetrahedralSchedule(BlockSchedule):
+    """3D simplex {(i,j,k): k <= j <= i < n}: 1-D grid of tet(n) tiles.
+
+    The 3D analogue of the paper's LTM — lambda -> (i,j,k) via the
+    integer-corrected cube root (mapping.tet_map). BB-3D launches n^3 and
+    wastes ~5/6 of it; this launches exactly the domain. Plane boundaries
+    are contiguous (segment bookkeeping inherited from the base)."""
+
+    rank = 3
+
+    @property
+    def num_blocks(self) -> int:
+        return M.tet(self.n)
+
+    @property
+    def domain_blocks(self) -> int:
+        return self.num_blocks
+
+    def index_map(self, lam):
+        return M.tet_map(lam)
+
+    def host_map(self, lam: int):
+        return M.tet_map(int(lam))
+
+    def segment_origin(self, i):
+        return M.tet(i)
+
+
+@dataclasses.dataclass(frozen=True)
+class Dense3DSchedule(BlockSchedule):
+    """BB-3D baseline: full n^3 cube row-major; tiles outside the simplex
+    k <= j <= i are dead work (guarded out by ``active``)."""
+
+    rank = 3
+    causal: bool = True  # guard to the simplex; False = full cube
+
+    @property
+    def num_blocks(self) -> int:
+        return self.n ** 3
+
+    @property
+    def domain_blocks(self) -> int:
+        return M.tet(self.n) if self.causal else self.n ** 3
+
+    def index_map(self, lam):
+        return M.bb3_map(lam, self.n)
+
+    def host_map(self, lam: int):
+        return M.bb3_map(int(lam), self.n)
+
+    def active(self, lam):
+        i, j, k = self.index_map(lam)
+        if not self.causal:
+            return True if isinstance(i, int) else jnp.ones_like(i, bool)
+        return M.bb3_active(i, j, k)
+
+    def segment_origin(self, i):
+        return i * self.n * self.n
+
 
 @dataclasses.dataclass(frozen=True)
 class DenseSchedule(BlockSchedule):
@@ -131,9 +215,8 @@ class DenseSchedule(BlockSchedule):
         i, j = self.index_map(lam)
         return (j <= i) if self.causal else (j == j)
 
-    def row_end(self, lam):
-        i, j = self.index_map(lam)
-        return j == (i if self.causal else self.n - 1)
+    def segment_origin(self, i):
+        return i * self.n
 
 
 @dataclasses.dataclass(frozen=True)
@@ -159,11 +242,13 @@ class BandSchedule(BlockSchedule):
     def host_map(self, lam: int):
         return M.band_map(int(lam), min(self.w, self.n))
 
-    def row_first_col(self, i):
+    def segment_origin(self, i):
         w = min(self.w, self.n)
+        head = M.tri(w - 1)
+        flat = head + (i - (w - 1)) * w
         if isinstance(i, int):
-            return max(0, i - w + 1)
-        return jnp.maximum(0, i - w + 1)
+            return M.tri(i) if i < w - 1 else flat
+        return jnp.where(i < w - 1, M.tri(i), flat)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -189,11 +274,14 @@ class PrefixSchedule(BlockSchedule):
     def host_map(self, lam: int):
         return M.prefix_full_map(int(lam), self.n, min(self.p, self.n))
 
-    def row_end(self, lam):
-        i, j = self.index_map(lam)
+    def segment_origin(self, i):
+        # row widths are max(i+1, p): flat head of p-wide rows, then
+        # triangular tail (matches mapping.prefix_full_map's enumeration)
         p = min(self.p, self.n)
-        last = jnp.maximum(i, p - 1) if not isinstance(i, int) else max(i, p - 1)
-        return j == last
+        tail = p * p + M.tri(i) - M.tri(p)
+        if isinstance(i, int):
+            return i * p if i < p else tail
+        return jnp.where(i < p, i * p, tail)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -306,8 +394,12 @@ def make_schedule(kind: str, n: int, **kw) -> BlockSchedule:
     kinds = {
         "ltm": TriangularSchedule,
         "triangular": TriangularSchedule,
+        "tet": TetrahedralSchedule,
+        "tetrahedral": TetrahedralSchedule,
         "bb": DenseSchedule,
         "dense": DenseSchedule,
+        "bb3": Dense3DSchedule,
+        "dense3d": Dense3DSchedule,
         "band": BandSchedule,
         "prefix": PrefixSchedule,
         "utm": UTMSchedule,

@@ -1,0 +1,110 @@
+"""Public 3-body op: packed tetrahedral triplet-interaction reduction.
+
+impl='pallas'   — tet-grid Pallas kernel (interpret on CPU).
+impl='scan'     — pure-XLA scan over the tet enumeration (fast CPU path).
+impl='bb3_scan' — bounding-box baseline as a scan: n^3 steps, simplex
+                  guard; wasted steps emit zeros (for benchmarks).
+impl='bb3'      — bounding-box Pallas baseline ((n, n, n) output).
+impl='ref'      — numpy oracle.
+
+``three_body_total`` reduces the packed values to the total over all
+ordered point triples using the multiset permutation weights — the
+correctness anchor against the dense einsum oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mapping as M
+from repro.kernels.tri_3body import kernel as K
+from repro.kernels.tri_3body import ref as R
+
+
+def _three_body_scan(x, block: int):
+    """lax.scan over lambda with tet_map dynamic slicing (packed out)."""
+    n_rows, d = x.shape
+    n = n_rows // block
+    t3 = M.tet(n)
+    xf = x.astype(jnp.float32)
+
+    def step(_, lam):
+        i, j, k = M.tet_map(lam)
+        sl = lambda t: jax.lax.dynamic_slice(xf, (t * block, 0), (block, d))
+        xi, xj, xk = sl(i), sl(j), sl(k)
+        a, b, c = xi @ xj.T, xj @ xk.T, xi @ xk.T
+        return None, jnp.sum((a @ b) * c)
+
+    _, vals = jax.lax.scan(step, None, jnp.arange(t3, dtype=jnp.int32))
+    return vals[:, None]
+
+
+def _three_body_scan_bb3(x, block: int):
+    """BB-3D baseline as a scan: n^3 lambda steps, simplex steps guarded by
+    the block-coordinate predicate; same packing semantics as tri_edm's
+    bb_scan (dead steps emit zeros)."""
+    n_rows, d = x.shape
+    n = n_rows // block
+    xf = x.astype(jnp.float32)
+
+    def step(_, lam):
+        i, j, k = M.bb3_map(lam, n)
+
+        def active():
+            sl = lambda t: jax.lax.dynamic_slice(
+                xf, (t * block, 0), (block, d))
+            xi, xj, xk = sl(i), sl(j), sl(k)
+            a, b, c = xi @ xj.T, xj @ xk.T, xi @ xk.T
+            return jnp.sum((a @ b) * c)
+
+        return None, jax.lax.cond(M.bb3_active(i, j, k), active,
+                                  lambda: 0.0)
+
+    _, vals = jax.lax.scan(step, None,
+                           jnp.arange(n * n * n, dtype=jnp.int32))
+    return vals[:, None]
+
+
+def three_body(x, block: int = 128, *, impl: str = "pallas",
+               interpret: bool = True):
+    """x: (N, d) points -> per-tile-triple reductions.
+
+    Packed impls return (T3, 1); 'bb3' returns (n, n, n) with the simplex
+    guard applied ('bb3_scan' returns (n^3, 1) with zeroed dead steps).
+    """
+    assert x.shape[0] % block == 0, (
+        f"n_rows={x.shape[0]} must be a multiple of block={block}")
+    if impl == "pallas":
+        return K.three_body_tet(x, block, interpret=interpret)
+    if impl == "scan":
+        return _three_body_scan(x, block)
+    if impl == "bb3_scan":
+        return _three_body_scan_bb3(x, block)
+    if impl == "bb3":
+        return K.three_body_bb3(x, block, interpret=interpret)
+    if impl == "ref":
+        return R.three_body_packed_ref(x, block)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def three_body_total(x, block: int = 128, *, impl: str = "pallas",
+                     interpret: bool = True):
+    """Total interaction over all ordered point triples, from the packed
+    unique-tile launch (mult-weighted) — equals ref.three_body_total_ref.
+
+    Works for every impl: the BB-3D layouts ((n,n,n) cube / (n^3, 1) flat)
+    are gathered down to the packed (T3, 1) order first, so the baseline
+    totals are comparable to the tet launch. The host-side coords table is
+    enumerated once and shared with the multiplicity weights."""
+    n = x.shape[0] // block
+    out = three_body(x, block, impl=impl, interpret=interpret)
+    coords = R.tet_coords(n)
+    if impl == "bb3":
+        packed = out[coords[:, 0], coords[:, 1], coords[:, 2]][:, None]
+    elif impl == "bb3_scan":
+        lin = (coords[:, 0] * n + coords[:, 1]) * n + coords[:, 2]
+        packed = out[lin]
+    else:
+        packed = out
+    return R.combine_packed(packed, n, coords)

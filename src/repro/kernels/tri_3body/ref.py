@@ -1,0 +1,77 @@
+"""Pure-jnp/numpy oracle for the 3-body triplet reduction (tet domain).
+
+The workload is the 3D analogue of tri_edm: for every *unique* tile triple
+(i, j, k) with k <= j <= i over an n-tile axis, reduce the fully-symmetric
+triplet interaction
+
+    s(I, J, K) = sum_{a in I, b in J, c in K} G[a,b] * G[b,c] * G[a,c],
+
+with G = X X^T the Gram matrix of the points. Because the summand is
+symmetric under any permutation of (a, b, c), the total over ALL ordered
+triples of points is recovered from the packed unique-tile values with the
+multiset permutation count as weight:
+
+    total = sum_lam mult(i,j,k) * s[lam],   mult = 6 / (#equal-pair syms)
+
+(6 for i > j > k, 3 for exactly two equal, 1 for i == j == k). That makes
+the packed tet launch — tet(n) tiles instead of BB-3D's n^3 — exactly
+sufficient, the 3D version of the paper's "compute each unique pair once".
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mapping as M
+
+
+def gram(x: jnp.ndarray) -> jnp.ndarray:
+    """x: (N, d) -> (N, N) Gram matrix in f32."""
+    x = x.astype(jnp.float32)
+    return x @ x.T
+
+
+def tile_mult(i: int, j: int, k: int) -> int:
+    """Permutation multiplicity of the multiset {i, j, k}."""
+    if i == j == k:
+        return 1
+    if i == j or j == k or i == k:
+        return 3
+    return 6
+
+
+def three_body_packed_ref(x: jnp.ndarray, block: int) -> jnp.ndarray:
+    """Oracle: (N, d) -> (T3, 1) per-unique-tile-triple reductions."""
+    n_rows = x.shape[0]
+    n = n_rows // block
+    g = np.asarray(gram(x))
+    out = np.empty((M.tet(n), 1), np.float32)
+    for lam in range(M.tet(n)):
+        i, j, k = M.tet_map(lam)
+        si, sj, sk = (slice(t * block, (t + 1) * block) for t in (i, j, k))
+        a, b, c = g[si, sj], g[sj, sk], g[si, sk]
+        out[lam, 0] = float(np.sum((a @ b) * c))
+    return jnp.asarray(out)
+
+
+def three_body_total_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Dense oracle for the total over all ordered point triples."""
+    g = gram(x)
+    return jnp.einsum("ab,bc,ac->", g, g, g)
+
+
+def tet_coords(n: int) -> np.ndarray:
+    """(T3, 3) table of tet_map(lam) for lam in [0, T3(n)) — built once and
+    shared by gathers and multiplicity weights."""
+    return np.array([M.tet_map(lam) for lam in range(M.tet(n))],
+                    np.int64).reshape(M.tet(n), 3)
+
+
+def combine_packed(packed: jnp.ndarray, n: int,
+                   coords: np.ndarray | None = None) -> jnp.ndarray:
+    """(T3, 1) packed unique-tile values -> multiplicity-weighted total."""
+    if coords is None:
+        coords = tet_coords(n)
+    mult = np.array([tile_mult(i, j, k) for i, j, k in coords], np.float32)
+    return jnp.sum(jnp.asarray(mult) * packed[:, 0])

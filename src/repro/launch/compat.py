@@ -1,0 +1,46 @@
+"""JAX cross-version compatibility helpers.
+
+`jax.sharding.AxisType` (and `jax.make_mesh`'s `axis_types=` kwarg) only
+exist in newer JAX; on 0.4.x every mesh axis is implicitly what newer
+versions call `Auto`. All mesh construction in this repo goes through
+``make_mesh`` below so both eras behave identically: on new JAX the axes
+are explicitly marked Auto, on old JAX the kwarg is simply omitted.
+
+FUNCTIONS only — importing this module must never touch jax device state
+(same contract as launch/mesh.py; dryrun.py sets XLA_FLAGS before the
+first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def auto_axis_types(num_axes: int):
+    """(AxisType.Auto,) * num_axes on JAX that has AxisType, else None."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return None
+    return (axis_type.Auto,) * num_axes
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """`compiled.cost_analysis()` as one flat dict across JAX versions.
+
+    JAX 0.4.x returns a per-device list of dicts; newer JAX returns the
+    dict directly. Either way the first (only, on single-controller
+    programs) entry is what callers want.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        return ca[0] if ca else {}
+    return ca
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """Version-proof `jax.make_mesh` with every axis in Auto mode."""
+    kwargs = {} if devices is None else {"devices": devices}
+    axis_types = auto_axis_types(len(tuple(axis_names)))
+    if axis_types is not None:
+        kwargs["axis_types"] = axis_types
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)

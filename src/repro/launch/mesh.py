@@ -5,6 +5,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.launch.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """v5e pod meshes: 16x16 = 256 chips per pod; 2 pods = 512 chips.
@@ -15,12 +17,10 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    auto = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=auto)
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh():
     """All local devices on a 1-D "data" axis (CPU tests / examples)."""
     n = len(jax.devices())
-    return jax.make_mesh((n,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return make_mesh((n,), ("data",))

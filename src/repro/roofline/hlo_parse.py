@@ -319,9 +319,12 @@ _FRAME_RE = re.compile(r"stack_frame_id=(\d+)")
 #    custom_vjp re-staging collapses source info), and
 #  * the explicit jax.named_scope markers placed around regions that have a
 #    Pallas kernel twin in kernels/ (ssm_scan for the mamba recurrence).
+# The scan cell's op_name spelling differs across JAX versions:
+# "vmap(vmap())/.../while" on newer JAX, "vmap(vmap(while))" on 0.4.x —
+# match both.
 _KERNEL_REGION_RE = re.compile(
-    r"vmap\(vmap\(\)\)[^\"]*while|ssm_scan_kernel|wkv_scan_kernel"
-    r"|tri_attn_kernel")
+    r"vmap\(vmap\(\)\)[^\"]*while|vmap\(vmap\(while\)\)"
+    r"|ssm_scan_kernel|wkv_scan_kernel|tri_attn_kernel")
 
 
 def _op_bytes(op: Op, sym: Dict[str, Op]) -> float:
@@ -436,7 +439,9 @@ def analyze_compiled(compiled) -> dict:
     """Full report for a jax compiled artifact: parser + XLA's own stats."""
     out = analyze(compiled.as_text())
     try:
-        ca = compiled.cost_analysis()
+        from repro.launch.compat import cost_analysis_dict
+
+        ca = cost_analysis_dict(compiled)
         out["xla_cost_analysis"] = {
             "flops": float(ca.get("flops", -1.0)),
             "bytes_accessed": float(ca.get("bytes accessed", -1.0)),

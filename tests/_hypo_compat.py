@@ -1,0 +1,188 @@
+"""Offline stand-in for `hypothesis` (property tests must collect/run
+without network or optional deps).
+
+``install()`` is a no-op when the real `hypothesis` package is importable
+— real hypothesis is always preferred. Otherwise it registers a miniature,
+API-compatible module as ``sys.modules['hypothesis']`` so test modules'
+``from hypothesis import given, settings, strategies as st`` keep working
+unchanged. The stand-in draws examples from a per-test fixed-seed RNG
+(deterministic across runs, seeded from the test's qualified name), runs
+``max_examples`` cases per test (boundary values first for integer
+strategies — a crude, shrink-less nod to hypothesis's edge-case bias), and
+supports the subset of the API this suite uses:
+
+  given, settings (decorator + register_profile/load_profile), HealthCheck,
+  st.integers, st.floats, st.lists, st.data.
+
+It is NOT hypothesis: no shrinking, no database, no stateful testing. It
+exists so the tier-1 suite keeps its property coverage offline instead of
+erroring at collection (the offline-test compat policy, see ROADMAP.md).
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 50
+
+
+class _Strategy:
+    """A draw function plus optional boundary examples (tried first)."""
+
+    def __init__(self, draw, boundaries=()):
+        self._draw = draw
+        self.boundaries = tuple(boundaries)
+
+    def example(self, rng, idx):
+        if idx < len(self.boundaries):
+            return self.boundaries[idx]
+        return self._draw(rng)
+
+
+def _integers(min_value=None, max_value=None):
+    lo = -(2 ** 63) if min_value is None else int(min_value)
+    hi = 2 ** 63 if max_value is None else int(max_value)
+    return _Strategy(lambda rng: rng.randint(lo, hi), boundaries=(lo, hi))
+
+
+def _floats(min_value=None, max_value=None, allow_nan=True,
+            allow_infinity=None, width=64, **_kw):
+    lo = -1e308 if min_value is None else float(min_value)
+    hi = 1e308 if max_value is None else float(max_value)
+
+    def draw(rng):
+        v = rng.uniform(lo, hi)
+        if width == 32:
+            import numpy as np
+
+            v = float(np.float32(v))
+            # f32 rounding may step outside a tight [lo, hi]; clamp back
+            v = min(max(v, lo), hi)
+        return v
+
+    return _Strategy(draw, boundaries=(lo, hi))
+
+
+def _lists(elements, min_size=0, max_size=None, **_kw):
+    cap = min_size + 10 if max_size is None else max_size
+
+    def draw(rng):
+        size = rng.randint(min_size, cap)
+        return [elements.example(rng, 2 + i) for i in range(size)]
+
+    return _Strategy(draw)
+
+
+class _DataObject:
+    """Interactive draws inside the test body (st.data())."""
+
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy, label=None):
+        return strategy.example(self._rng, 2)
+
+
+def _data():
+    return _Strategy(lambda rng: _DataObject(rng))
+
+
+class _settings:
+    """Decorator + profile registry, matching the hypothesis surface."""
+
+    _profiles: dict = {}
+
+    def __init__(self, max_examples=None, deadline=None,
+                 suppress_health_check=None, **_kw):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        if self.max_examples is not None:
+            fn._hypo_max_examples = self.max_examples
+        return fn
+
+    @classmethod
+    def register_profile(cls, name, *args, **kwargs):
+        cls._profiles[name] = kwargs
+
+    @classmethod
+    def load_profile(cls, name):
+        pass
+
+
+class _HealthCheck:
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+
+
+def _given(*strategies, **kw_strategies):
+    def decorate(fn):
+        # Positional strategies fill the RIGHTMOST parameters (hypothesis
+        # semantics); earlier ones (self, fixtures) stay visible to pytest.
+        # Bind drawn values by NAME so fixtures passed as kwargs can never
+        # collide with them.
+        sig = inspect.signature(fn)
+        names = list(sig.parameters)
+        strat_names = names[len(names) - len(strategies):] if strategies \
+            else []
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = (getattr(wrapper, "_hypo_max_examples", None)
+                 or getattr(fn, "_hypo_max_examples", None)
+                 or DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for idx in range(n):
+                kwvals = {nm: s.example(rng, idx)
+                          for nm, s in zip(strat_names, strategies)}
+                kwvals.update((k, s.example(rng, idx))
+                              for k, s in kw_strategies.items())
+                fn(*args, **kwargs, **kwvals)
+
+        # Hide the strategy-filled parameters from pytest (like hypothesis
+        # does), or it would try to resolve them as fixtures.
+        hidden = set(strat_names) | set(kw_strategies)
+        params = [p for p in sig.parameters.values()
+                  if p.name not in hidden]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        del wrapper.__wrapped__  # keep inspect from following back to fn
+        return wrapper
+    return decorate
+
+
+def install() -> bool:
+    """Register the stand-in if real hypothesis is absent. Returns True
+    when the real package is in use (idempotent: recognizes a previously
+    installed shim and keeps reporting False for it)."""
+    try:
+        import hypothesis
+
+        return not getattr(hypothesis, "__is_repro_offline_shim__", False)
+    except ImportError:
+        pass
+
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = _integers
+    st.floats = _floats
+    st.lists = _lists
+    st.data = _data
+
+    mod = types.ModuleType("hypothesis")
+    mod.given = _given
+    mod.settings = _settings
+    mod.HealthCheck = _HealthCheck
+    mod.strategies = st
+    mod.__is_repro_offline_shim__ = True
+
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st
+    return False
+
+
+install()

@@ -1,8 +1,17 @@
 """Shared pytest config. IMPORTANT: do NOT set XLA_FLAGS here — smoke tests
 and benches must see the single real CPU device; only launch/dryrun.py forces
-512 placeholder devices (in its own process)."""
+512 placeholder devices (in its own process).
 
-from hypothesis import HealthCheck, settings
+Offline-test compat policy: the suite must collect and pass with no network
+and no optional deps. `_hypo_compat.install()` registers a fixed-seed
+stand-in for `hypothesis` when the real package is absent (real hypothesis
+is used untouched when available)."""
+
+import _hypo_compat
+
+_HAVE_REAL_HYPOTHESIS = _hypo_compat.install()
+
+from hypothesis import HealthCheck, settings  # noqa: E402 (after install)
 
 settings.register_profile(
     "repro",

@@ -14,6 +14,7 @@ from hypothesis import given, strategies as st
 
 from repro.configs import registry as REG
 from repro.configs.base import ShapeConfig
+from repro.launch.compat import make_mesh
 from repro.train import checkpoint as CKPT
 from repro.train import data as DATA
 from repro.train import fault_tolerance as FT
@@ -81,8 +82,7 @@ def test_elastic_restore_new_sharding(tmp_path):
     """Restore onto a (trivially different) sharding — the elastic path."""
     _, state, _, _ = _tiny_setup()
     CKPT.save(str(tmp_path), state, 1)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     from repro.parallel import sharding as SH
     target = jax.tree.map(
         lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)

@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
+from repro.launch.compat import make_mesh
 from repro.parallel import compression as C
 
 
@@ -55,8 +56,7 @@ def test_ef_sgd_converges_like_fp32():
 def test_compressed_psum_single_device_mesh():
     """On a 1-way mesh the compressed all-reduce must be the identity
     (up to quantization handled by EF)."""
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     ar = C.make_compressed_allreduce(mesh, axis="data")
     grads = {"w": jnp.array([1.0, -2.0, 3.0]), "b": jnp.array([0.5])}
     err = C.init_error_state(grads)

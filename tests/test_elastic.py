@@ -33,6 +33,7 @@ def test_elastic_restore_onto_8_device_mesh(tmp_path):
         import jax, jax.numpy as jnp
         from repro.configs import registry as REG
         from repro.configs.base import ShapeConfig
+        from repro.launch.compat import make_mesh
         from repro.parallel import sharding as SH
         from repro.train import checkpoint as CKPT
         from repro.train import data as DATA
@@ -40,8 +41,7 @@ def test_elastic_restore_onto_8_device_mesh(tmp_path):
         from repro.train import train_step as TS
 
         # the elastic replan for 8 surviving chips, TP axis preserved at 2
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
         cfg = REG.smoke_config("yi-9b")
         opt = OPT.OptConfig(lr=1e-3, warmup_steps=1, total_steps=10)
         ref = TS.init_state(jax.random.key(0), cfg, opt)

@@ -37,8 +37,10 @@ def test_scan_multiplies_by_trip_count():
     assert an["unknown_trip_loops"] == 0
     # XLA's own cost_analysis counts the body once — this is the bug the
     # parser exists to fix; keep the regression visible:
+    from repro.launch.compat import cost_analysis_dict
+
     comp = jax.jit(f).lower(x, w).compile()
-    xla_flops = comp.cost_analysis().get("flops", 0.0)
+    xla_flops = cost_analysis_dict(comp).get("flops", 0.0)
     assert xla_flops <= an["flops"] / 16
 
 

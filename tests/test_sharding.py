@@ -12,12 +12,12 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import registry as REG
+from repro.launch.compat import make_mesh
 from repro.parallel import sharding as SH
 
 
 def _mesh1():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def test_fallback_drops_indivisible_axes():
@@ -47,10 +47,10 @@ _SUBPROC = textwrap.dedent("""
     import numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.configs import registry as REG
+    from repro.launch.compat import make_mesh
     from repro.parallel import sharding as SH
 
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 
     # 1. every full-scale arch: all specs valid on the mesh
     for arch in REG.ARCH_IDS:
