@@ -11,11 +11,17 @@ tet_map over every launched tet lambda vs the BB-3D div/mod + simplex
 guard over every launched cube lambda, plus the 3-body triplet kernel
 (scan impls) at small scale.
 
-  PYTHONPATH=src python -m benchmarks.bench_tet_mapping
+On an accelerator backend, --accelerator times the REAL Pallas tet kernel
+(interpret=False, block=128, production scale) against the BB-3D Pallas
+baseline instead of the scan-at-toy-scale stand-ins; on CPU the flag
+falls back to the scan impls with a note (ROADMAP open item).
+
+  PYTHONPATH=src python -m benchmarks.bench_tet_mapping [--accelerator]
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 
 import jax
@@ -67,23 +73,53 @@ def run(n_values=None, out_path: str | None = None) -> list:
     return rows
 
 
-def kernel_run(n_rows: int = 32, block: int = 8, d: int = 4) -> dict:
-    """3-body triplet reduction wall-clock: tet scan vs BB-3D scan."""
+def kernel_run(n_rows: int = 32, block: int = 8, d: int = 4, *,
+               accelerator: bool = False) -> dict:
+    """3-body triplet reduction wall-clock.
+
+    Default: tet scan vs BB-3D scan at toy scale (CPU-friendly).
+    accelerator=True on a non-CPU backend: the real Pallas kernels with
+    interpret=False and block=128 at production tile counts — the numbers
+    that actually validate the launch-reduction claim on hardware.
+    """
     from repro.kernels.tri_3body import ops as OPS
 
+    backend = jax.default_backend()
+    on_hw = accelerator and backend != "cpu"
+    if accelerator and not on_hw:
+        print(f"--accelerator requested but backend is {backend!r}; "
+              "falling back to scan impls at toy scale")
+    if on_hw:
+        block = 128
+        n_rows = 16 * block  # n = 16 tiles/side: tet 816 vs bb3 4096 tiles
+        d = max(d, 64)
+        impls = ("pallas", "bb3")
+        interpret = False
+    else:
+        impls = ("scan", "bb3_scan")
+        interpret = True
+
     x = jax.random.normal(jax.random.PRNGKey(0), (n_rows, d), jnp.float32)
-    tet_fn = jax.jit(lambda v: OPS.three_body(v, block, impl="scan"))
-    bb3_fn = jax.jit(lambda v: OPS.three_body(v, block, impl="bb3_scan"))
+    tet_fn = jax.jit(lambda v: OPS.three_body(
+        v, block, impl=impls[0], interpret=interpret))
+    bb3_fn = jax.jit(lambda v: OPS.three_body(
+        v, block, impl=impls[1], interpret=interpret))
     t_tet = _time(tet_fn, x)
     t_bb3 = _time(bb3_fn, x)
     n = n_rows // block
     return {"n_rows": n_rows, "block": block, "d": d,
+            "backend": backend, "impls": impls,
             "tiles_tet": M.tet(n), "tiles_bb3": n ** 3,
             "t_tet_ms": t_tet * 1e3, "t_bb3_ms": t_bb3 * 1e3,
             "I_wallclock": t_bb3 / t_tet}
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--accelerator", action="store_true",
+                    help="time the Pallas tet kernel with interpret=False "
+                         "and block=128 (needs a non-CPU backend)")
+    args = ap.parse_args(argv)
     rows = run(out_path="artifacts/bench_tet_mapping.json")
     print(f"{'N':>6} {'tet':>10} {'bb3':>11} {'waste%':>7} {'reduce':>7} "
           f"{'I(map)':>7}")
@@ -92,8 +128,9 @@ def main():
               f"{100 * r['waste_fraction_bb3']:6.1f}% "
               f"{r['launch_reduction']:6.2f}x "
               f"{r['improvement_I_vs_bb3']:7.3f}")
-    k = kernel_run()
-    print(f"3-body kernel (N={k['n_rows']}, b={k['block']}): "
+    k = kernel_run(accelerator=args.accelerator)
+    print(f"3-body kernel (N={k['n_rows']}, b={k['block']}, "
+          f"{k['impls'][0]}/{k['impls'][1]} on {k['backend']}): "
           f"tiles {k['tiles_tet']}/{k['tiles_bb3']} "
           f"tet={k['t_tet_ms']:.1f}ms bb3={k['t_bb3_ms']:.1f}ms "
           f"I={k['I_wallclock']:.3f}")

@@ -1,12 +1,16 @@
 """Benchmark harness entry point: one benchmark per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--fast]
+  PYTHONPATH=src python -m benchmarks.run [--fast | --smoke]
 
   bench_mapping     — paper Fig. 3 (dummy kernel / strategy cost + waste)
   bench_tet_mapping — the 3D analogue: BB-3D (n^3) vs tetrahedral launch
   bench_edm         — paper Fig. 5 (EDM, d = 1..4 features, LTM vs BB)
   bench_attention   — the technique on causal flash attention (tiles/FLOPs/I)
+  bench_packed      — packed ragged batch vs per-request vs padded launches
   bench_roofline    — §Roofline table from the dry-run artifacts (if present)
+
+--smoke is the CI tier: tiny n, scan impls only, seconds not minutes —
+scripts/check.sh runs it so the benchmark scripts cannot rot offline.
 """
 
 from __future__ import annotations
@@ -20,18 +24,22 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="smaller N ranges (CI-sized)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny n, scan impls: execution check only "
+                         "(scripts/check.sh tier)")
     args = ap.parse_args(argv)
     os.makedirs("artifacts", exist_ok=True)
 
     from benchmarks import bench_mapping, bench_tet_mapping, bench_edm, \
-        bench_attention, bench_roofline
+        bench_attention, bench_packed, bench_roofline
 
     t0 = time.time()
     print("=" * 72)
     print("bench_mapping (paper Fig. 3)")
     print("=" * 72)
     rows = bench_mapping.run(
-        n_values=[64, 256, 1024] if args.fast else None,
+        n_values=[16, 64] if args.smoke
+        else [64, 256, 1024] if args.fast else None,
         out_path="artifacts/bench_mapping.json")
     for r in rows:
         ii = r["improvement_I_vs_bb"]
@@ -39,13 +47,13 @@ def main(argv=None):
               f"I(utm)={ii['utm']:.3f} wasted bb={r['blocks']['bb']['wasted']}"
               f" ltm={r['blocks']['ltm']['wasted']}")
     print("  LTM-R exactness:", bench_mapping.exactness_check(
-        1024 if args.fast else 4096))
+        256 if args.smoke else 1024 if args.fast else 4096))
 
     print("=" * 72)
     print("bench_tet_mapping (BB-3D vs tetrahedral launch)")
     print("=" * 72)
     rows = bench_tet_mapping.run(
-        n_values=[16, 64] if args.fast else None,
+        n_values=[8, 16] if args.smoke else [16, 64] if args.fast else None,
         out_path="artifacts/bench_tet_mapping.json")
     for r in rows:
         print(f"  N={r['N']:6d} tet={r['launched_tet']} "
@@ -57,8 +65,10 @@ def main(argv=None):
     print("bench_edm (paper Fig. 5)")
     print("=" * 72)
     rows = bench_edm.run(
-        n_values=(1024,) if args.fast else (1024, 2048, 4096),
-        features=(1, 4) if args.fast else (1, 2, 3, 4),
+        n_values=(256,) if args.smoke else (1024,) if args.fast
+        else (1024, 2048, 4096),
+        features=(1,) if args.smoke else (1, 4) if args.fast
+        else (1, 2, 3, 4),
         out_path="artifacts/bench_edm.json")
     for r in rows:
         print(f"  N={r['N']:6d} d={r['features']} I={r['I']:.3f} "
@@ -69,11 +79,26 @@ def main(argv=None):
     print("bench_attention (LTM flash attention vs BB)")
     print("=" * 72)
     rows = bench_attention.run(
-        seqs=(512,) if args.fast else (1024, 2048),
-        block=128, out_path="artifacts/bench_attention.json")
+        seqs=(256,) if args.smoke else (512,) if args.fast
+        else (1024, 2048),
+        block=64 if args.smoke else 128,
+        out_path="artifacts/bench_attention.json")
     for r in rows:
         print(f"  seq={r['seq']:5d} tiles={r['tiles_ltm']}/{r['tiles_bb']} "
               f"I_wall={r['I_wallclock']:.3f} I_flops={r['I_flops']:.3f}")
+
+    print("=" * 72)
+    print("bench_packed (packed ragged batch vs per-request vs padded)")
+    print("=" * 72)
+    rec = bench_packed.run(
+        lens=(64, 16, 96) if args.smoke else (192, 48, 320, 96),
+        block=8 if args.smoke else 16,
+        out_path="artifacts/bench_packed.json")
+    b, t = rec["blocks"], rec["times_ms"]
+    print(f"  lens={rec['lens']} blocks packed={b['packed']} "
+          f"padded-bb={b['padded_bb']} padded-ltm={b['padded_ltm']} "
+          f"t_packed={t['packed']:.1f}ms t_per={t['per_request']:.1f}ms "
+          f"t_padded={t['padded_ltm_batch']:.1f}ms")
 
     print("=" * 72)
     print("bench_roofline (dry-run artifacts)")

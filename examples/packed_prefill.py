@@ -1,0 +1,50 @@
+"""Packed ragged prefill: ONE launch admits a whole mixed-length batch.
+
+The engine gathers every free slot's prompt, concatenates them along the
+sequence axis, and prefills them together over the PackedSchedule grid
+(core/packing.py) — sum_r tri(n_r) tiles instead of one decode-step launch
+per prompt token. Outputs are token-for-token identical to the sequential
+path; only the launch count changes.
+
+  PYTHONPATH=src python examples/packed_prefill.py
+"""
+
+import jax
+import numpy as np
+
+from repro.configs import registry as REG
+from repro.models import model as MD
+from repro.serve.engine import Engine
+
+
+def main():
+    cfg = REG.smoke_config("yi-9b")
+    params = MD.init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, size=s).astype(np.int32)
+               for s in (19, 5, 33, 11)]
+
+    results, stats = {}, {}
+    for mode in ("packed", "sequential"):
+        eng = Engine(params, cfg, slots=4, max_len=64, temperature=0.0,
+                     prefill_mode=mode, prefill_block=8)
+        for uid, p in enumerate(prompts):
+            eng.submit(p, max_new=8, uid=uid)
+        results[mode] = eng.run()
+        stats[mode] = eng.stats
+        print(f"{mode:10s} prefill launches: "
+              f"{eng.stats['prefill_launches']:3d} "
+              f"(for {eng.stats['prefill_tokens']} prompt tokens over "
+              f"{eng.stats['admit_rounds']} admit round(s))")
+
+    assert results["packed"] == results["sequential"], \
+        "packed prefill must be token-for-token identical"
+    assert stats["packed"]["prefill_launches"] == \
+        stats["packed"]["admit_rounds"]
+    print("packed_prefill OK — identical tokens, "
+          f"{stats['sequential']['prefill_launches']}x fewer launches -> "
+          f"{stats['packed']['prefill_launches']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,8 +3,9 @@
 # guard: the suite must collect and pass with no network and no optional
 # deps (hypothesis is shimmed by tests/_hypo_compat.py when absent).
 #
-#   scripts/check.sh            # tier-1 + no-network guard
+#   scripts/check.sh            # tier-1 + no-network guard + bench smoke
 #   scripts/check.sh -k tet     # extra args forwarded to pytest
+#                               # (bench smoke skipped when args are given)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -13,3 +14,11 @@ export PYTHONPATH="src:scripts${PYTHONPATH:+:$PYTHONPATH}"
 # -p _offline_guard turns any outbound connection attempt into a failure,
 # so offline-collectability cannot regress silently.
 python -m pytest -x -q -p _offline_guard "$@"
+
+# Benchmark smoke tier: every benchmark script must still EXECUTE offline
+# (tiny n, scan impls) so the scripts cannot silently rot between the
+# occasions someone runs them at full scale.
+if [ "$#" -eq 0 ]; then
+    echo "== benchmarks --smoke =="
+    python -m benchmarks.run --smoke
+fi

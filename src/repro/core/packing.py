@@ -1,0 +1,330 @@
+"""PackedSchedule — one 1-D grid over the CONCATENATION of simplex domains.
+
+The paper's g(lambda) removes the O(n^2) wasted blocks of a bounding-box
+launch for ONE triangular domain. A serving system faces MANY triangular
+domains of different sizes at once (a ragged prefill batch: R prompts, each
+its own causal triangle). The obvious options are R separate launches
+(per-launch overhead, no cross-request occupancy) or one launch padded to
+the largest member (O(R * n_max^2) blocks, mostly waste for mixed sizes).
+This module provides the third: concatenate the members' block enumerations
+into a single 1-D grid of exactly ``sum_r num_blocks_r`` steps, and map the
+packed lambda back to (request, i, j) with O(log R) scalar work — the
+natural ragged-batch extension of the paper's map, in the spirit of Navarro
+et al.'s later non-linear block maps (arXiv 1609.01490).
+
+Offset-table layout
+-------------------
+For members m_0 .. m_{R-1} the schedule precomputes two cumulative tables,
+both of length R + 1 and strictly derived from the members:
+
+  ``offsets[r]``     = sum_{s < r} m_s.num_blocks   (block offsets)
+                       offsets[R] == num_blocks == total grid size.
+                       Member r owns the half-open lambda range
+                       [offsets[r], offsets[r+1]); ranges are contiguous
+                       and ascending, so ``request_of(lam)`` is the
+                       largest r with offsets[r] <= lam — found by a
+                       fixed-trip-count binary search (ceil(log2 R) steps,
+                       branch-free, scalar-core friendly).
+  ``row_offsets[r]`` = sum_{s < r} m_s.n            (tile-ROW offsets)
+                       Members are also concatenated along the tile axis of
+                       the packed operand: member r's tile row i lives at
+                       packed row ``row_offsets[r] + i``. Kernels turn the
+                       member-local (i, j) into packed-operand block
+                       coordinates with this table.
+
+Delegation without branching
+----------------------------
+After the binary search finds r, the member map must run on the local
+lambda. Instead of tracing R different member maps and selecting (O(R)
+jaxpr growth), every supported member kind is normalized into ONE closed
+form parameterized by integers gathered from per-member tables:
+
+  * TriangularSchedule(n)      ->  band family, w = n  (band_map(lam, n)
+                                   degenerates to g(lambda) exactly)
+  * BandSchedule(n, w)         ->  band family, w = min(w, n)
+  * PrefixSchedule(n, p), p>0  ->  prefix family (flat head + tri tail)
+  * PrefixSchedule(n, p=0)     ->  band family, w = n (pure triangle)
+
+``band_map`` and ``prefix_full_map`` (core.mapping) are already exact for
+traced parameters, so the traced index_map is: binary search (O(log R)) +
+two O(1) closed-form evaluations + one select. Host calls delegate to the
+members directly (python ints, exact unboundedly).
+
+Zero interior waste: num_blocks == domain_blocks == sum of member domains;
+the only masking left is the paper's O(n) intra-diagonal-tile kind, inside
+each member.
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mapping as M
+from repro.core.schedule import (
+    BandSchedule,
+    BlockSchedule,
+    PrefixSchedule,
+    TriangularSchedule,
+)
+
+# Member kinds the parametric (branch-free traced) delegation covers.
+SUPPORTED_MEMBERS = (TriangularSchedule, BandSchedule, PrefixSchedule)
+
+
+def _member_params(m: BlockSchedule) -> Tuple[int, int, int]:
+    """Normalize a member into (n, w, p) for the unified two-family map.
+
+    w is the band-family width in TILES (w == n for full triangles), p the
+    prefix-family width in TILES (p == 0 selects the band family).
+    """
+    if isinstance(m, BandSchedule):
+        return m.n, min(m.w, m.n), 0
+    if isinstance(m, PrefixSchedule):
+        p = min(m.p, m.n)
+        if p == 0:  # pure triangle; band family handles it exactly
+            return m.n, m.n, 0
+        return m.n, m.n, p
+    if isinstance(m, TriangularSchedule):
+        if not m.include_diagonal:
+            raise ValueError(
+                "PackedSchedule members must include the diagonal "
+                "(attention tiles always have a causal diagonal)")
+        return m.n, m.n, 0
+    raise TypeError(
+        f"unsupported member schedule {type(m).__name__}; supported: "
+        + ", ".join(t.__name__ for t in SUPPORTED_MEMBERS))
+
+
+# ---------------------------------------------------------------------------
+# Table-parameterized traced primitives. ``starts`` / the per-member
+# parameter vectors may be ANY scalar-indexable: a baked jnp constant array
+# (host-built schedules) or a Pallas SMEM scalar-prefetch Ref (kernels,
+# where index_maps must not capture constants). Only scalar indexing is
+# used, so both work unchanged.
+# ---------------------------------------------------------------------------
+
+
+def request_from_starts(lam, starts, num_requests: int):
+    """Largest r with starts[r] <= lam: fixed-trip-count binary search.
+
+    ceil(log2 R) probes, branch-free (where-selects), scalar-core friendly.
+    starts must be ascending with starts[0] == 0 and lam < total blocks.
+    """
+    lo = jnp.zeros((), jnp.int32)
+    hi = jnp.asarray(num_requests - 1, jnp.int32)
+    for _ in range((num_requests - 1).bit_length()):
+        mid = (lo + hi + 1) // 2
+        take = starts[mid] <= lam
+        lo = jnp.where(take, mid, lo)
+        hi = jnp.where(take, hi, mid - 1)
+    return lo
+
+
+def member_map_params(local, n_r, w_r, p_r):
+    """Member-local lambda -> (i, j) from normalized (n, w, p) params.
+
+    Both closed forms are evaluated (O(1) each) and selected — no R-way
+    branching. p_r is clamped to >= 1 for the prefix evaluation so its
+    flat-head division is defined; the select ignores it when p_r == 0.
+    """
+    bi, bj = M.band_map(local, w_r)
+    pi, pj = M.prefix_full_map(local, n_r, jnp.maximum(p_r, 1))
+    is_p = p_r > 0
+    return jnp.where(is_p, pi, bi), jnp.where(is_p, pj, bj)
+
+
+def first_col_params(i, w_r):
+    """First j of row i for a (w, p)-normalized member (band left edge;
+    0 for unbanded rows). The kernels' accumulator-reset predicate."""
+    return jnp.maximum(0, i - w_r + 1)
+
+
+def last_col_params(i, p_r):
+    """Last j of row i (prefix rows are at least p wide; i otherwise).
+    The kernels' emit predicate."""
+    return jnp.maximum(i, p_r - 1)
+
+
+def segment_origin_params(i, w_r, p_r):
+    """Member-local lambda of the first tile of row i (both families)."""
+    band = jnp.where(i < w_r - 1, M.tri(jnp.minimum(i, w_r - 1)),
+                     M.tri(w_r - 1) + (i - (w_r - 1)) * w_r)
+    pre = jnp.where(i < p_r, i * p_r, p_r * p_r + M.tri(i) - M.tri(p_r))
+    return jnp.where(p_r > 0, pre, band)
+
+
+def _member_inverse(m: BlockSchedule, i: int, j: int) -> int:
+    """(i, j) -> member-local lambda (host ints; the testing inverse)."""
+    n, w, p = _member_params(m)
+    if p:  # prefix family: rows < p are p wide, then triangular tail
+        return i * p + j if i < p else p * p + M.tri(i) - M.tri(p) + j
+    if i < w - 1:
+        return M.tri(i) + j
+    return M.tri(w - 1) + (i - (w - 1)) * w + (j - (i - (w - 1)))
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedSchedule(BlockSchedule):
+    """Concatenation of rank-2 member schedules into one 1-D grid.
+
+    ``n`` is the packed tile-axis size (sum of member n): the packed
+    operand has ``n * block`` rows when every member uses the same block
+    edge. index_map returns rank-3 coordinates (request, i, j) with (i, j)
+    member-local.
+    """
+
+    members: Tuple[BlockSchedule, ...] = ()
+
+    rank = 3  # (request, i, j)
+
+    def __post_init__(self):
+        if not self.members:
+            raise ValueError("PackedSchedule needs at least one member")
+        for m in self.members:
+            _member_params(m)  # raises on unsupported kinds
+        total_rows = sum(m.n for m in self.members)
+        if self.n != total_rows:
+            raise ValueError(
+                f"n={self.n} must equal the summed member rows {total_rows}")
+
+    @classmethod
+    def from_members(cls, members) -> "PackedSchedule":
+        members = tuple(members)
+        return cls(n=sum(m.n for m in members), members=members)
+
+    # -- static tables -------------------------------------------------------
+    @property
+    def num_requests(self) -> int:
+        return len(self.members)
+
+    @property
+    def offsets(self) -> Tuple[int, ...]:
+        """Cumulative BLOCK offsets, length R+1 (see module docstring)."""
+        offs = [0]
+        for m in self.members:
+            offs.append(offs[-1] + m.num_blocks)
+        return tuple(offs)
+
+    @property
+    def row_offsets(self) -> Tuple[int, ...]:
+        """Cumulative tile-ROW offsets, length R+1."""
+        offs = [0]
+        for m in self.members:
+            offs.append(offs[-1] + m.n)
+        return tuple(offs)
+
+    def _tables(self):
+        """(starts, rows, n, w, p) int32 arrays gathered by request id."""
+        prm = [_member_params(m) for m in self.members]
+        return (
+            jnp.asarray(self.offsets[:-1], jnp.int32),
+            jnp.asarray(self.row_offsets[:-1], jnp.int32),
+            jnp.asarray([q[0] for q in prm], jnp.int32),
+            jnp.asarray([q[1] for q in prm], jnp.int32),
+            jnp.asarray([q[2] for q in prm], jnp.int32),
+        )
+
+    # -- interface -----------------------------------------------------------
+    @property
+    def num_blocks(self) -> int:
+        return self.offsets[-1]
+
+    @property
+    def domain_blocks(self) -> int:
+        return sum(m.domain_blocks for m in self.members)
+
+    # -- request lookup ------------------------------------------------------
+    def host_request(self, lam: int) -> int:
+        """Largest r with offsets[r] <= lam (host ints)."""
+        return bisect.bisect_right(self.offsets, int(lam)) - 1
+
+    def request_of(self, lam):
+        """Traced O(log R) branch-free binary search over ``offsets``."""
+        return request_from_starts(lam, self._tables()[0],
+                                   self.num_requests)
+
+    # -- the packed map ------------------------------------------------------
+    def index_map(self, lam):
+        """lambda -> (request, i, j); (i, j) member-local, traced."""
+        starts, _, n_t, w_t, p_t = self._tables()
+        r = self.request_of(lam)
+        local = lam - starts[r]
+        i, j = member_map_params(local, n_t[r], w_t[r], p_t[r])
+        return r, i, j
+
+    def host_map(self, lam: int) -> Tuple[int, int, int]:
+        r = self.host_request(int(lam))
+        i, j = self.members[r].host_map(int(lam) - self.offsets[r])
+        return r, i, j
+
+    def pack_lambda(self, r: int, i: int, j: int) -> int:
+        """(request, i, j) -> packed lambda (host round-trip inverse)."""
+        return self.offsets[r] + _member_inverse(self.members[r], i, j)
+
+    # -- packed-operand coordinates ------------------------------------------
+    def packed_rows(self, lam):
+        """lambda -> (q_row, k_row) block coords into the packed tile axis
+        (row_offsets[r] + member-local i / j), traced or host."""
+        if isinstance(lam, (int, np.integer)):
+            r, i, j = self.host_map(lam)
+            base = self.row_offsets[r]
+            return base + i, base + j
+        _, rows, _, _, _ = self._tables()
+        r, i, j = self.index_map(lam)
+        return rows[r] + i, rows[r] + j
+
+    # -- per-request row bounds (kernel accumulator reset / emit) ------------
+    def first_col(self, r, i):
+        """First j of member r's row i (band family: sliding left edge)."""
+        return first_col_params(i, self._tables()[3][r])
+
+    def last_col(self, r, i):
+        """Last j of member r's row i (prefix family: >= p - 1)."""
+        return last_col_params(i, self._tables()[4][r])
+
+    def host_first_col(self, r: int, i: int) -> int:
+        _, w, _ = _member_params(self.members[r])
+        return max(0, i - w + 1)
+
+    def host_last_col(self, r: int, i: int) -> int:
+        _, _, p = _member_params(self.members[r])
+        return max(i, p - 1)
+
+    # -- segment bookkeeping -------------------------------------------------
+    # A segment is one contiguous row of one member: seg_start resets the
+    # online-softmax accumulator, seg_end emits. Parametric segment_origin
+    # covers both families with traced table gathers.
+    def seg_start(self, lam):
+        starts, _, _, w_t, p_t = self._tables()
+        r, i, _ = self.index_map(lam)
+        return lam == starts[r] + segment_origin_params(i, w_t[r], p_t[r])
+
+    def seg_end(self, lam):
+        starts, _, _, w_t, p_t = self._tables()
+        r, i, _ = self.index_map(lam)
+        so = segment_origin_params(i + 1, w_t[r], p_t[r])
+        return lam == starts[r] + so - 1
+
+    def host_seg_start(self, lam: int) -> bool:
+        r, i, j = self.host_map(lam)
+        return j == self.host_first_col(r, i)
+
+    def host_seg_end(self, lam: int) -> bool:
+        r, i, j = self.host_map(lam)
+        return j == self.host_last_col(r, i)
+
+    # -- host enumeration ----------------------------------------------------
+    def enumerate_host(self) -> List[Tuple[int, int, int]]:
+        return [self.host_map(l) for l in range(self.num_blocks)]
+
+
+def padded_bb_blocks(members) -> int:
+    """Blocks a pad-to-max bounding-box launch would issue for the same
+    batch: R * n_max^2 — the baseline bench_packed compares against."""
+    n_max = max(m.n for m in members)
+    return len(tuple(members)) * n_max * n_max

@@ -27,6 +27,9 @@ Schedules provided:
   Dense3DSchedule     — BB-3D baseline (full n^3 cube, simplex guard).
   BandSchedule        — sliding-window trapezoid (beyond-paper).
   PrefixSchedule      — prefix-causal (VLM image prefix; beyond-paper).
+  PackedSchedule      — concatenation of mixed ltm/band/prefix members into
+                        one 1-D grid for ragged batches (core/packing.py;
+                        register via make_schedule("packed", 0, members=...)).
   UTMSchedule         — Avril-style upper-tri map at *block* level (competitor).
   RBSchedule          — Jung rectangular fold (competitor).
   RECSchedule         — Ries recursive partition (competitor, multi-pass).
@@ -391,6 +394,17 @@ class RECSchedule(BlockSchedule):
 
 
 def make_schedule(kind: str, n: int, **kw) -> BlockSchedule:
+    if kind == "packed":
+        # Packed multi-domain grid (core/packing.py): members is the list of
+        # rank-2 schedules to concatenate; n is derived, pass 0 (or the
+        # summed member rows) for uniformity with the other kinds.
+        from repro.core.packing import PackedSchedule
+
+        members = tuple(kw.pop("members"))
+        total = sum(m.n for m in members)
+        if n not in (0, total):
+            raise ValueError(f"packed n must be 0 or {total}, got {n}")
+        return PackedSchedule(n=total, members=members, **kw)
     kinds = {
         "ltm": TriangularSchedule,
         "triangular": TriangularSchedule,

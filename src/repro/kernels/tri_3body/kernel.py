@@ -14,11 +14,22 @@ Per tile triple the body is three (b, d) x (d, b) MXU contractions plus a
 (b, b) x (b, b) product-and-reduce:
   A = Xi Xj^T, B = Xj Xk^T, C = Xi Xk^T,  s = sum((A @ B) * C).
 
+strict=True enforces a > b > c over GLOBAL point indices in-kernel (not
+post-hoc): A is masked to a > b and B to b > c before the product-reduce,
+so each unordered triple of DISTINCT points is counted exactly once and
+the total is the plain sum of the packed values (no multiset weights).
+Off-diagonal tile triples (i > j > k) are unaffected — their masks are
+all-ones by construction — so strictness only changes the O(n^2) diagonal
+tiles, exactly the paper's intra-diagonal-masking observation one
+dimension up.
+
 TPU notes: d is padded to the lane width by Mosaic; block should be a
 multiple of 8 (sublane) and ideally 128, as for tri_edm.
 """
 
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +38,20 @@ from jax.experimental import pallas as pl
 from repro.core import mapping as M
 
 
-def _triplet_tile(xi, xj, xk):
+def _strict_masks(i, j, k, blk: int):
+    """(a > b, b > c) masks over global point indices for tile (i, j, k).
+
+    All-ones whenever the tiles are distinct (i > j implies a > b for every
+    a in tile i, b in tile j), so applying them unconditionally is exact
+    and branch-free — only diagonal tiles are actually masked."""
+    row = jax.lax.broadcasted_iota(jnp.int32, (blk, blk), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (blk, blk), 1)
+    m_ab = (i * blk + row) > (j * blk + col)
+    m_bc = (j * blk + row) > (k * blk + col)
+    return m_ab, m_bc
+
+
+def _triplet_tile(xi, xj, xk, masks=None):
     xi = xi.astype(jnp.float32)
     xj = xj.astype(jnp.float32)
     xk = xk.astype(jnp.float32)
@@ -36,23 +60,33 @@ def _triplet_tile(xi, xj, xk):
     a = dot(xi, xj)  # (b, b) = G[I, J]
     b = dot(xj, xk)  # (b, b) = G[J, K]
     c = dot(xi, xk)  # (b, b) = G[I, K]
+    if masks is not None:  # strict a > b > c (a > c follows)
+        m_ab, m_bc = masks
+        a = jnp.where(m_ab, a, 0.0)
+        b = jnp.where(m_bc, b, 0.0)
     ab = jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
                              preferred_element_type=jnp.float32)
     return jnp.sum(ab * c)
 
 
-def _tet_kernel(x_i_ref, x_j_ref, x_k_ref, out_ref):
-    out_ref[0, 0] = _triplet_tile(x_i_ref[...], x_j_ref[...], x_k_ref[...])
+def _tet_kernel(x_i_ref, x_j_ref, x_k_ref, out_ref, *, block: int,
+                strict: bool):
+    lam = pl.program_id(0)
+    i, j, k = M.tet_map(lam)
+    masks = _strict_masks(i, j, k, block) if strict else None
+    out_ref[0, 0] = _triplet_tile(x_i_ref[...], x_j_ref[...], x_k_ref[...],
+                                  masks)
 
 
-def three_body_tet(x, block: int, *, interpret: bool = True):
+def three_body_tet(x, block: int, *, strict: bool = False,
+                   interpret: bool = True):
     """x: (N, d) -> packed (T3, 1) unique-tile-triple reductions."""
     n_rows, d = x.shape
     assert n_rows % block == 0
     n = n_rows // block
     t3 = M.tet(n)
     return pl.pallas_call(
-        _tet_kernel,
+        functools.partial(_tet_kernel, block=block, strict=strict),
         grid=(t3,),
         in_specs=[
             pl.BlockSpec((block, d), lambda lam: (M.tet_map(lam)[0], 0)),
@@ -65,7 +99,8 @@ def three_body_tet(x, block: int, *, interpret: bool = True):
     )(x, x, x)
 
 
-def _bb3_kernel(x_i_ref, x_j_ref, x_k_ref, out_ref):
+def _bb3_kernel(x_i_ref, x_j_ref, x_k_ref, out_ref, *, block: int,
+                strict: bool):
     i = pl.program_id(0)
     j = pl.program_id(1)
     k = pl.program_id(2)
@@ -74,15 +109,17 @@ def _bb3_kernel(x_i_ref, x_j_ref, x_k_ref, out_ref):
 
     @pl.when(inside)
     def _():
+        masks = _strict_masks(i, j, k, block) if strict else None
         out_ref[0, 0, 0] = _triplet_tile(
-            x_i_ref[...], x_j_ref[...], x_k_ref[...])
+            x_i_ref[...], x_j_ref[...], x_k_ref[...], masks)
 
     @pl.when(jnp.logical_not(inside))
     def _():
         out_ref[0, 0, 0] = 0.0
 
 
-def three_body_bb3(x, block: int, *, interpret: bool = True):
+def three_body_bb3(x, block: int, *, strict: bool = False,
+                   interpret: bool = True):
     """BB-3D baseline: (n, n, n) output; tiles outside the simplex are
     launched and immediately guarded out — the O(n^3) waste the tet map
     eliminates."""
@@ -90,7 +127,7 @@ def three_body_bb3(x, block: int, *, interpret: bool = True):
     assert n_rows % block == 0
     n = n_rows // block
     return pl.pallas_call(
-        _bb3_kernel,
+        functools.partial(_bb3_kernel, block=block, strict=strict),
         grid=(n, n, n),
         in_specs=[
             pl.BlockSpec((block, d), lambda i, j, k: (i, 0)),

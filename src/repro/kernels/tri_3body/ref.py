@@ -41,16 +41,25 @@ def tile_mult(i: int, j: int, k: int) -> int:
     return 6
 
 
-def three_body_packed_ref(x: jnp.ndarray, block: int) -> jnp.ndarray:
-    """Oracle: (N, d) -> (T3, 1) per-unique-tile-triple reductions."""
+def three_body_packed_ref(x: jnp.ndarray, block: int,
+                          strict: bool = False) -> jnp.ndarray:
+    """Oracle: (N, d) -> (T3, 1) per-unique-tile-triple reductions.
+
+    strict=True keeps only globally strictly-ordered point triples
+    a > b > c (masking A to a > b and B to b > c; a > c follows), matching
+    the kernels' in-diagonal-tile masking."""
     n_rows = x.shape[0]
     n = n_rows // block
     g = np.asarray(gram(x))
+    idx = np.arange(n_rows)
     out = np.empty((M.tet(n), 1), np.float32)
     for lam in range(M.tet(n)):
         i, j, k = M.tet_map(lam)
         si, sj, sk = (slice(t * block, (t + 1) * block) for t in (i, j, k))
         a, b, c = g[si, sj], g[sj, sk], g[si, sk]
+        if strict:
+            a = np.where(idx[si][:, None] > idx[sj][None, :], a, 0.0)
+            b = np.where(idx[sj][:, None] > idx[sk][None, :], b, 0.0)
         out[lam, 0] = float(np.sum((a @ b) * c))
     return jnp.asarray(out)
 
@@ -59,6 +68,18 @@ def three_body_total_ref(x: jnp.ndarray) -> jnp.ndarray:
     """Dense oracle for the total over all ordered point triples."""
     g = gram(x)
     return jnp.einsum("ab,bc,ac->", g, g, g)
+
+
+def three_body_total_strict_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Dense oracle counting each unordered DISTINCT-point triple once:
+    sum over a > b > c of G[a,b] G[b,c] G[a,c]."""
+    g = np.asarray(gram(x))
+    n_rows = g.shape[0]
+    idx = np.arange(n_rows)
+    lower = idx[:, None] > idx[None, :]
+    a = np.where(lower, g, 0.0)  # a > b
+    # sum_{a>b>c} = sum_{a,c} (A_strict @ A_strict)[a,c] * G[a,c]
+    return jnp.asarray(np.sum((a @ a) * g))
 
 
 def tet_coords(n: int) -> np.ndarray:

@@ -9,7 +9,10 @@ remains — exactly the paper's O(n^2) -> O(n) claim at tile granularity.
 
 Schedules: 'ltm' (causal), 'band' (sliding window, beyond-paper), 'prefix'
 (VLM prefix-causal, beyond-paper). 'bb' is the paper's bounding-box baseline
-(2-D grid + block-level guard).
+(2-D grid + block-level guard). PackedTriSched/packed_fwd extend the same
+machinery to the CONCATENATION of R ragged requests: one 1-D grid of
+sum_r blocks_r steps whose (7, R) member table rides in scalar-prefetch
+SMEM (core/packing.py supplies the O(log R) request search).
 
 All kernels accumulate in f32 VMEM scratch and are validated in interpret
 mode against ref.py (tests/test_kernels_tri_attn.py). TPU notes: block_q and
@@ -130,6 +133,118 @@ def _token_mask(sched: TriSched, i, j, bq, bk):
 
 
 # ---------------------------------------------------------------------------
+# Packed multi-request schedule (ragged prefill) — core/packing.py lifted to
+# token-mask level. All members share one square block edge; the packed
+# operand is the concatenation of the members' sequences along S.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedTriSched:
+    """Static metadata for ONE packed ragged-attention launch.
+
+    members[r] describes request r's own domain (kind/n/window/prefix, all
+    in that request's local coordinates). Request r's tokens occupy packed
+    rows [tok_offsets[r], tok_offsets[r+1]); its tiles occupy packed grid
+    steps [offsets[r], offsets[r+1]) of the single 1-D lambda grid.
+    """
+
+    members: tuple  # Tuple[TriSched, ...]
+
+    def __post_init__(self):
+        assert self.members, "packed schedule needs at least one member"
+        blk = self.members[0].bq
+        for m in self.members:
+            assert m.bq == m.bk == blk, (
+                "packed members must share one square block edge")
+
+    @property
+    def blk(self) -> int:
+        return self.members[0].bq
+
+    @property
+    def steps(self) -> int:
+        return sum(m.rm_steps for m in self.members)
+
+    @property
+    def total_tiles(self) -> int:
+        return sum(m.n for m in self.members)
+
+    @property
+    def s_total(self) -> int:
+        return self.total_tiles * self.blk
+
+    @property
+    def windows(self) -> tuple:
+        """Per-request window in TOKENS; 0 = unwindowed."""
+        return tuple(m.window or 0 for m in self.members)
+
+    @property
+    def prefixes(self) -> tuple:
+        """Per-request bidirectional prefix in TOKENS; 0 = none."""
+        return tuple(m.prefix for m in self.members)
+
+    def table(self):
+        """(7, R) int32 member table — the ONLY dynamic state the packed
+        kernel needs, shipped to SMEM via scalar prefetch (index_maps must
+        not capture constants). Rows 0/1 are the kernel-layer mirror of
+        core PackedSchedule.offsets/row_offsets (same cumulative layout,
+        see core/packing.py); rows 5/6 add the token-level mask params the
+        block-coordinate core has no business knowing. Rows:
+          0 starts   cumulative block offsets (offsets[:-1])
+          1 rows     cumulative tile-row offsets into the packed operand
+          2 n        member tiles per side
+          3 w_b      band-family width in tiles (== n for unbanded)
+          4 p_b      prefix width in tiles (0 = band family)
+          5 win      window in tokens (0 = unwindowed)
+          6 pre      prefix in tokens (0 = none)
+        """
+        import numpy as np
+
+        starts, rows = [0], [0]
+        for m in self.members:
+            starts.append(starts[-1] + m.rm_steps)
+            rows.append(rows[-1] + m.n)
+        cols = [(s, t, m.n, m.w_b, m.p_b, w, p)
+                for s, t, m, w, p in zip(starts[:-1], rows[:-1], self.members,
+                                         self.windows, self.prefixes)]
+        return np.asarray(cols, np.int32).T.copy()
+
+
+class _TableRow:
+    """Scalar-indexable view of one row of the member table; adapts both a
+    (7, R) array and a Pallas SMEM Ref to packing's ``starts[mid]`` API."""
+
+    def __init__(self, tbl, row: int):
+        self._tbl, self._row = tbl, row
+
+    def __getitem__(self, idx):
+        return self._tbl[self._row, idx]
+
+
+def _packed_decode(lam, tbl, n_requests: int):
+    """lambda + member table -> (r, i, j, q_row, k_row); tbl is the (7, R)
+    table as array or SMEM ref. O(log R) search + O(1) map (core/packing)."""
+    from repro.core import packing as PK
+
+    r = PK.request_from_starts(lam, _TableRow(tbl, 0), n_requests)
+    local = lam - tbl[0, r]
+    i, j = PK.member_map_params(local, tbl[2, r], tbl[3, r], tbl[4, r])
+    return r, i, j, tbl[1, r] + i, tbl[1, r] + j
+
+
+def _packed_token_mask(i, j, blk, win, pre):
+    """(blk, blk) mask for one member tile (i, j): causal + the member's
+    window/prefix (request-LOCAL token positions; win/pre traced scalars)."""
+    qp = i * blk + jax.lax.broadcasted_iota(jnp.int32, (blk, blk), 0)
+    kp = j * blk + jax.lax.broadcasted_iota(jnp.int32, (blk, blk), 1)
+    m = kp <= qp
+    m &= (qp - kp) < jnp.where(win > 0, win, jnp.int32(2 ** 30))
+    m |= kp < pre
+    return m
+
+
+# ---------------------------------------------------------------------------
 # Forward
 # ---------------------------------------------------------------------------
 
@@ -204,6 +319,121 @@ def fwd(q, k, v, sched: TriSched, *, sm_scale=None, interpret=True):
         ],
         interpret=interpret,
     )(q, k, v)
+    return out, lse
+
+
+# ---------------------------------------------------------------------------
+# Packed forward: ONE 1-D grid over the concatenation of R ragged requests.
+# The per-request binary search + both closed-form member maps run on the
+# scalar core each grid step (O(log R) + O(1)); on real TPU the offset
+# tables could move to scalar-prefetch SMEM (PrefetchScalarGridSpec), but
+# for R <= slot counts the baked-constant gathers are equivalent.
+# ---------------------------------------------------------------------------
+
+
+def _packed_fwd_kernel(tbl_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
+                       m_s, l_s, acc_s, *, psched: PackedTriSched,
+                       scale: float):
+    from repro.core import packing as PK
+
+    lam = pl.program_id(2)
+    r, i, j, _, _ = _packed_decode(lam, tbl_ref, len(psched.members))
+    first_col = PK.first_col_params(i, tbl_ref[3, r])
+    last_col = PK.last_col_params(i, tbl_ref[4, r])
+
+    @pl.when(j == first_col)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, MASK_VALUE)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(
+        _packed_token_mask(i, j, psched.blk, tbl_ref[5, r], tbl_ref[6, r]),
+        s, MASK_VALUE)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_s[...] = l_s[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_s[...] = acc_s[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(j == last_col)
+    def _emit():
+        l = l_s[...]
+        o_ref[0, 0] = (acc_s[...] / l).astype(o_ref.dtype)
+        lse_ref[0, 0] = (m_s[...] + jnp.log(l))[:, 0].astype(lse_ref.dtype)
+
+
+def packed_fwd(q, k, v, psched: PackedTriSched, *, sm_scale=None,
+               interpret=True):
+    """Ragged batched prefill in ONE launch.
+
+    q: (B, H, S_total, D); k, v: (B, Hkv, S_total, D) — all requests'
+    sequences concatenated along S (each padded to a multiple of blk).
+    Grid is (B, H, sum_r member_blocks): zero interior waste, no
+    cross-request tiles. The (7, R) member table rides in via scalar
+    prefetch (SMEM), so index_maps and body share one O(log R) decode.
+    Returns (out, lse) in the packed layout.
+    """
+    import numpy as np
+
+    b, h, s_len, d = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+    assert s_len == psched.s_total, (s_len, psched.s_total)
+    blk = psched.blk
+    n_req = len(psched.members)
+    tbl = np.ascontiguousarray(psched.table())
+
+    def q_spec(b_, h_, lam, tbl_):
+        _, _, _, q_row, _ = _packed_decode(lam, tbl_, n_req)
+        return (b_, h_, q_row, 0)
+
+    def kv_spec(b_, h_, lam, tbl_):
+        _, _, _, _, k_row = _packed_decode(lam, tbl_, n_req)
+        return (b_, h_ // g, k_row, 0)
+
+    def lse_spec(b_, h_, lam, tbl_):
+        _, _, _, q_row, _ = _packed_decode(lam, tbl_, n_req)
+        return (b_, h_, q_row)
+
+    kernel = functools.partial(_packed_fwd_kernel, psched=psched, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, h, psched.steps),
+        in_specs=[
+            pl.BlockSpec((1, 1, blk, d), q_spec),
+            pl.BlockSpec((1, 1, blk, d), kv_spec),
+            pl.BlockSpec((1, 1, blk, d), kv_spec),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, blk, d), q_spec),
+            pl.BlockSpec((1, 1, blk), lse_spec),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((blk, 1), jnp.float32),
+            pltpu.VMEM((blk, 1), jnp.float32),
+            pltpu.VMEM((blk, d), jnp.float32),
+        ],
+    )
+    out, lse = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(q.shape, q.dtype),
+            jax.ShapeDtypeStruct((b, h, s_len), jnp.float32),
+        ],
+        interpret=interpret,
+    )(tbl, q, k, v)
     return out, lse
 
 

@@ -8,6 +8,11 @@ the schedule kind from the mask parameters, and dispatches between:
                   training path. Differentiable via custom VJP.
   impl='ref'    — the O(S^2)-memory oracle (ref.py); tests only.
   impl='bb'     — the paper's bounding-box baseline Pallas kernel (fwd only).
+
+``packed_prefill_attention`` + ``make_packed_sched`` are the ragged-batch
+variant: R requests of mixed lengths concatenated along S, attended
+block-diagonally in ONE launch over the core/packing PackedSchedule grid
+(forward-only — the serving engine's bulk-admission prefill).
 """
 
 from __future__ import annotations
@@ -20,7 +25,7 @@ import jax.numpy as jnp
 from repro.kernels.tri_attn import kernel as K
 from repro.kernels.tri_attn import ref as R
 from repro.kernels.tri_attn import scan_impl as SC
-from repro.kernels.tri_attn.kernel import TriSched
+from repro.kernels.tri_attn.kernel import PackedTriSched, TriSched
 
 
 def make_sched(s_len: int, *, block_q: int, block_k: int, window=None,
@@ -40,6 +45,76 @@ def make_sched(s_len: int, *, block_q: int, block_k: int, window=None,
         bk = bq = min(bq, bk)  # triangular domain also needs square tiles
     return TriSched(kind=kind, n=s_len // bq, bq=bq, bk=bk,
                     window=window, prefix=prefix)
+
+
+def make_packed_sched(seq_lens, *, block: int, window=None,
+                      prefix=0) -> PackedTriSched:
+    """Packed ragged-batch schedule for per-request sequence lengths.
+
+    seq_lens: token lengths, each already padded to a multiple of ``block``
+    (the engine pads prompts; the packed operand is their concatenation).
+    window / prefix may be scalars (applied to every member) or
+    per-request sequences. Members degrade exactly like make_sched:
+    window -> band, prefix -> prefix-causal, else ltm.
+    """
+    seq_lens = tuple(int(s) for s in seq_lens)
+    r = len(seq_lens)
+    windows = tuple(window) if isinstance(window, (list, tuple)) \
+        else (window,) * r
+    prefixes = tuple(prefix) if isinstance(prefix, (list, tuple)) \
+        else (prefix,) * r
+    assert len(windows) == r and len(prefixes) == r, (
+        f"per-request window/prefix lists must match the batch: "
+        f"{len(windows)} windows / {len(prefixes)} prefixes for {r} "
+        f"requests")
+    members = []
+    for s_len, w, p in zip(seq_lens, windows, prefixes):
+        assert s_len % block == 0, (
+            f"member seq {s_len} not padded to block {block}")
+        if w is not None:
+            kind = "band"
+        elif p:
+            kind = "prefix"
+        else:
+            kind = "ltm"
+        members.append(TriSched(kind=kind, n=s_len // block, bq=block,
+                                bk=block, window=w, prefix=p))
+    return PackedTriSched(members=tuple(members))
+
+
+def packed_prefill_attention(q, k, v, psched: PackedTriSched, *,
+                             sm_scale=None, impl: str = "scan",
+                             interpret: bool = True):
+    """Ragged batched-prefill attention over the packed layout.
+
+    q: (B, H, S_total, D); k, v: (B, Hkv, S_total, D) — every batch row
+    shares the same packing (the engine uses B=1). One launch covers all
+    requests: sum_r blocks_r grid steps, zero cross-request tiles.
+    Forward-only (prefill is inference). Returns (B, H, S_total, D).
+    """
+    b, h, s_len, d = q.shape
+    assert s_len == psched.s_total, (
+        f"packed operand has {s_len} rows but the schedule covers "
+        f"{psched.s_total}")
+    scale = float(sm_scale if sm_scale is not None else 1.0 / (d ** 0.5))
+    if impl == "pallas":
+        out, _ = K.packed_fwd(q, k, v, psched, sm_scale=scale,
+                              interpret=interpret)
+        return out
+    if impl == "scan":
+        return SC.make_packed_scan_attention(psched, scale)(q, k, v)
+    if impl == "ref":
+        outs = []
+        base = 0
+        for m in psched.members:
+            s_r = m.n * m.bq
+            seg = slice(base, base + s_r)
+            outs.append(R.mha_reference(q[:, :, seg], k[:, :, seg],
+                                        v[:, :, seg], sm_scale=scale,
+                                        window=m.window, prefix=m.prefix))
+            base += s_r
+        return jnp.concatenate(outs, axis=2)
+    raise ValueError(f"unknown impl {impl!r}")
 
 
 @functools.lru_cache(maxsize=None)

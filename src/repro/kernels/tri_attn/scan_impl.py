@@ -21,7 +21,14 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.tri_attn.kernel import MASK_VALUE, TriSched, _token_mask
+from repro.kernels.tri_attn.kernel import (
+    MASK_VALUE,
+    PackedTriSched,
+    TriSched,
+    _packed_decode,
+    _packed_token_mask,
+    _token_mask,
+)
 
 
 def _slice_rows(x, blk_idx, blk):
@@ -79,6 +86,84 @@ def _fwd_cell(q, k, v, sched: TriSched, scale):
     (_, _, _, out, lse), _ = jax.lax.scan(
         step, init, jnp.arange(sched.rm_steps, dtype=jnp.int32))
     return out, lse
+
+
+def _packed_fwd_cell(q, k, v, psched: PackedTriSched, scale):
+    """Packed ragged forward, one (batch, kv-head) cell. q: (G, S_total, D);
+    k, v: (S_total, D) — requests concatenated along S.
+
+    Mirrors the packed Pallas kernel 1:1: a single lax.scan of
+    sum_r member_blocks steps whose slices follow core/packing's
+    (request, i, j) map. Per-request rows are lambda-contiguous, so the
+    unconditional row write leaves each row's final value in place exactly
+    as in _fwd_cell. Returns (out (G, S_total, D), lse (G, S_total))."""
+    g, s_len, d = q.shape
+    blk = psched.blk
+    n_req = len(psched.members)
+    tbl = jnp.asarray(psched.table())  # constants are fine in a lax.scan
+
+    def step(carry, lam):
+        from repro.core import packing as PK
+
+        m, l, acc, out, lse = carry
+        r, i, j, row_q, row_k = _packed_decode(lam, tbl, n_req)
+        reset = j == PK.first_col_params(i, tbl[3, r])
+        m = jnp.where(reset, MASK_VALUE, m)
+        l = jnp.where(reset, 0.0, l)
+        acc = jnp.where(reset, 0.0, acc)
+
+        qi = _slice_rows(q, row_q, blk).astype(jnp.float32)  # (G, blk, D)
+        kj = _slice_rows(k, row_k, blk).astype(jnp.float32)
+        vj = _slice_rows(v, row_k, blk).astype(jnp.float32)
+        s = jnp.einsum("gqd,kd->gqk", qi, kj,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(
+            _packed_token_mask(i, j, blk, tbl[5, r], tbl[6, r])[None], s,
+            MASK_VALUE)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "gqk,kd->gqd", p, vj, preferred_element_type=jnp.float32)
+        out = _update_rows(out, (acc / l[..., None]).astype(out.dtype),
+                           row_q, blk)
+        lse = jax.lax.dynamic_update_slice(
+            lse, m_new + jnp.log(l), (0, row_q * blk))
+        return (m_new, l, acc, out, lse), None
+
+    init = (
+        jnp.full((g, blk), MASK_VALUE, jnp.float32),
+        jnp.zeros((g, blk), jnp.float32),
+        jnp.zeros((g, blk, d), jnp.float32),
+        jnp.zeros((g, s_len, d), q.dtype),
+        jnp.zeros((g, s_len), jnp.float32),
+    )
+    (_, _, _, out, lse), _ = jax.lax.scan(
+        step, init, jnp.arange(psched.steps, dtype=jnp.int32))
+    return out, lse
+
+
+@functools.lru_cache(maxsize=None)
+def make_packed_scan_attention(psched: PackedTriSched, scale: float):
+    """Forward-only packed ragged attention for static (psched, scale).
+
+    q (B, H, S_total, D); k, v (B, Hkv, S_total, D) -> (B, H, S_total, D).
+    Prefill is inference — no VJP (training still uses the per-domain
+    schedules)."""
+
+    cell = jax.vmap(jax.vmap(  # over B, then Hkv
+        lambda q, k, v: _packed_fwd_cell(q, k, v, psched, scale),
+        in_axes=(0, 0, 0)), in_axes=(0, 0, 0))
+
+    def attn(q, k, v):
+        b, h, s, d = q.shape
+        hkv = k.shape[1]
+        qg = q.reshape(b, hkv, h // hkv, s, d)
+        out_g, _ = cell(qg, k, v)
+        return out_g.reshape(b, h, s, d)
+
+    return attn
 
 
 def _dq_cell(q, k, v, do, lse, delta, sched: TriSched, scale):

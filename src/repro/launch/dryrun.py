@@ -6,6 +6,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 # tests and benches see the single real CPU device.
 
 import argparse      # noqa: E402
+import functools     # noqa: E402
 import json          # noqa: E402
 import time          # noqa: E402
 import traceback     # noqa: E402
@@ -243,6 +244,53 @@ def _dump(path, rec):
         json.dump(rec, f, indent=1, default=str)
 
 
+def run_tri_3body_cell(out_dir: str, *, n_rows: int = 256, block: int = 8,
+                       d: int = 8, strict: bool = False,
+                       force: bool = False) -> dict:
+    """Roofline cell for the tri_3body kernel family (ROADMAP open item):
+    lower + compile the tet-grid scan AND the BB-3D baseline scan, and
+    record their trip-count-corrected FLOPs / HBM bytes so the 6x launch
+    reduction shows up in artifacts alongside the model cells."""
+    from repro.core import mapping as M
+    from repro.kernels.tri_3body import ops as OPS3
+
+    tag = f"n{n_rows}_b{block}_d{d}" + ("_strict" if strict else "")
+    out_path = os.path.join(out_dir, f"kernel__tri_3body__{tag}.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    n = n_rows // block
+    rec = {"kernel": "tri_3body", "n_rows": n_rows, "block": block,
+           "d": d, "strict": strict,
+           "tiles_tet": M.tet(n), "tiles_bb3": n ** 3,
+           "launch_reduction": (n ** 3) / M.tet(n)}
+    x = jax.ShapeDtypeStruct((n_rows, d), jnp.float32)
+    try:
+        for name, impl in (("tet", "scan"), ("bb3", "bb3_scan")):
+            fn = jax.jit(functools.partial(
+                OPS3.three_body, block=block, impl=impl, strict=strict))
+            t0 = time.time()
+            compiled = fn.lower(x).compile()
+            an = HLO.analyze_compiled(compiled)
+            rec[name] = {
+                "compile_s": round(time.time() - t0, 2),
+                "flops": an["flops"],
+                "hbm_bytes": an["hbm_bytes"],
+                "intensity_flops_per_byte":
+                    an["flops"] / max(an["hbm_bytes"], 1.0),
+            }
+        rec["flops_ratio_bb3_over_tet"] = (
+            rec["bb3"]["flops"] / max(rec["tet"]["flops"], 1.0))
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    _dump(out_path, rec)
+    return rec
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -257,8 +305,26 @@ def main():
     ap.add_argument("--tag", default="",
                     help="suffix for the output JSON (A/B experiments)")
     ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--kernel", default=None, choices=["tri_3body"],
+                    help="dry-run a standalone kernel cell instead of the "
+                         "(arch x shape x mesh) grid")
+    ap.add_argument("--kernel-n-rows", type=int, default=256)
+    ap.add_argument("--kernel-block", type=int, default=8)
+    ap.add_argument("--kernel-d", type=int, default=8)
+    ap.add_argument("--strict", action="store_true",
+                    help="tri_3body: a > b > c in-kernel masking")
     args = ap.parse_args()
     opts = tuple(o for o in args.opt.split(",") if o)
+
+    if args.kernel == "tri_3body":
+        rec = run_tri_3body_cell(
+            args.out, n_rows=args.kernel_n_rows, block=args.kernel_block,
+            d=args.kernel_d, strict=args.strict, force=args.force)
+        status = "ok" if rec.get("ok") else "FAIL " + rec.get("error", "")
+        print(f"kernel tri_3body {status} tiles "
+              f"{rec['tiles_tet']}/{rec['tiles_bb3']} "
+              f"flops bb3/tet={rec.get('flops_ratio_bb3_over_tet', 0):.2f}")
+        return
 
     archs = REG.ARCH_IDS if (args.all or args.arch is None) else [args.arch]
     shapes = (list(REG.SHAPES) if (args.all or args.shape is None)

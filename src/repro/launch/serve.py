@@ -28,12 +28,19 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prefill-mode", default="packed",
+                    choices=["packed", "sequential"],
+                    help="packed = one ragged launch per admit round "
+                         "(attention archs); sequential = per-token loop")
+    ap.add_argument("--prefill-block", type=int, default=16)
     args = ap.parse_args(argv)
 
     cfg = REG.smoke_config(args.arch)
     params = MD.init_params(jax.random.key(args.seed), cfg)
     engine = Engine(params, cfg, slots=args.slots, max_len=args.max_len,
-                    temperature=args.temperature, seed=args.seed)
+                    temperature=args.temperature, seed=args.seed,
+                    prefill_mode=args.prefill_mode,
+                    prefill_block=args.prefill_block)
 
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
@@ -47,8 +54,13 @@ def main(argv=None):
     for uid in sorted(results):
         print(f"req {uid}: {len(results[uid])} tokens -> "
               f"{results[uid][:8]}...")
+    st = engine.stats
     print(f"{len(results)}/{args.requests} requests, {n_tok} tokens "
           f"in {dt:.1f}s ({n_tok/dt:.1f} tok/s, {args.slots} slots)")
+    print(f"prefill[{engine.prefill_mode}]: {st['prefill_launches']} "
+          f"launches for {st['prefill_requests']} requests / "
+          f"{st['prefill_tokens']} tokens over {st['admit_rounds']} "
+          f"admit rounds")
     return results
 
 

@@ -77,11 +77,15 @@ def init_attention(key, cfg, dtype):
 
 
 def attention(params, x, cfg, *, positions, prefix: int = 0,
-              attn_impl: str = "scan", block: int = 512):
+              attn_impl: str = "scan", block: int = 512, packed=None):
     """Full-sequence attention (training / prefill).
 
     x: (B, S, d). Returns (out (B, S, d), k, v) — k/v (B, S, Hkv, hd) already
     RoPE-rotated, ready to seed a decode cache.
+
+    packed: optional PackedTriSched — S is then the concatenation of a
+    ragged request batch and attention is block-diagonal per request (the
+    batched ragged-prefill path; ``positions`` must restart per request).
     """
     b, s, d = x.shape
     h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -111,6 +115,14 @@ def attention(params, x, cfg, *, positions, prefix: int = 0,
         qt = hints.constrain(qt, "attn_qkv")
         kt = hints.constrain(kt, "attn_qkv")
         vt = hints.constrain(vt, "attn_qkv")
+    if packed is not None:
+        # Ragged multi-request prefill: one launch over the packed grid;
+        # member schedules carry each request's window/prefix.
+        ot = attn_ops.packed_prefill_attention(
+            qt, kt, vt, packed,
+            impl="pallas" if attn_impl == "pallas" else "scan")
+        ctx = ot.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+        return ctx @ params["wo"], k, v
     blk = block
     while s % blk:
         blk //= 2

@@ -71,15 +71,22 @@ def embed_inputs(params, cfg, batch):
 
 def forward(params, cfg, batch, *, attn_impl: str = "scan",
             remat: bool = True, collect_state: bool = False,
-            block: int = 512, act_sharding=None):
+            block: int = 512, act_sharding=None, positions=None,
+            packed=None, full_capacity: bool = False):
     """Returns (hidden (B, S, d), aux, states_or_None).
 
     act_sharding: optional NamedSharding pinned onto the (B, S, d) scan
     carry — Megatron-style activation partitioning (batch over DP, d over
-    TP) that bounds the per-chip saved-carry memory of the layer scan."""
+    TP) that bounds the per-chip saved-carry memory of the layer scan.
+
+    positions/packed/full_capacity serve the batched ragged prefill: S is
+    then the concatenation of R prompts, positions restart per request,
+    packed is the PackedTriSched making attention block-diagonal, and MoE
+    buffers are sized drop-free (decode-path semantics)."""
     x = embed_inputs(params, cfg, batch)
     s = x.shape[1]
-    positions = jnp.arange(s, dtype=jnp.int32)
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)
     prefix = cfg.n_patches if cfg.frontend == "vision_patches" else 0
 
     def step(x, layer_params):
@@ -88,7 +95,8 @@ def forward(params, cfg, batch, *, attn_impl: str = "scan",
         x = hints.constrain(x, "act_seq")
         x, aux, st = T.superlayer_fwd(
             layer_params, x, cfg, positions=positions, prefix=prefix,
-            attn_impl=attn_impl, block=block, collect_state=collect_state)
+            attn_impl=attn_impl, block=block, collect_state=collect_state,
+            packed=packed, full_capacity=full_capacity)
         return x, (aux, st)
 
     if remat:

@@ -76,15 +76,21 @@ def init_stack(key, cfg, dtype):
 
 
 def layer_fwd(p, x, cfg, kind: str, p_idx: int, *, positions, prefix: int,
-              attn_impl: str, block: int, collect_state: bool):
-    """Returns (x, aux, state). state is None unless collect_state."""
+              attn_impl: str, block: int, collect_state: bool,
+              packed=None, full_capacity: bool = False):
+    """Returns (x, aux, state). state is None unless collect_state.
+
+    packed: PackedTriSched for the ragged batched-prefill path (attention
+    goes block-diagonal per request). full_capacity: drop-free MoE buffers
+    (serving semantics — a prefill that drops tokens diverges from the
+    incremental decode it seeds)."""
     aux = jnp.zeros((), jnp.float32)
     state = None
     h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
     if kind == "attn":
         out, k, v = L.attention(p["mixer"], h, cfg, positions=positions,
                                 prefix=prefix, attn_impl=attn_impl,
-                                block=block)
+                                block=block, packed=packed)
         if collect_state:
             state = {"k": k, "v": v}
         x = x + out
@@ -104,20 +110,22 @@ def layer_fwd(p, x, cfg, kind: str, p_idx: int, *, positions, prefix: int,
 
     h2 = L.rms_norm(x, p["norm2"], cfg.norm_eps)
     if _ffn_is_moe(cfg, p_idx):
-        out2, aux = MOE.moe_mlp(p["ffn"], h2, cfg)
+        out2, aux = MOE.moe_mlp(p["ffn"], h2, cfg,
+                                full_capacity=full_capacity)
     else:
         out2 = L.mlp(p["ffn"], h2, cfg)
     return x + out2, aux, state
 
 
 def superlayer_fwd(p, x, cfg, *, positions, prefix, attn_impl, block,
-                   collect_state):
+                   collect_state, packed=None, full_capacity: bool = False):
     aux = jnp.zeros((), jnp.float32)
     states = {}
     for i, kind in enumerate(cfg.layer_pattern):
         x, a, st = layer_fwd(p[f"l{i}"], x, cfg, kind, i, positions=positions,
                              prefix=prefix, attn_impl=attn_impl, block=block,
-                             collect_state=collect_state)
+                             collect_state=collect_state, packed=packed,
+                             full_capacity=full_capacity)
         aux = aux + a
         if collect_state:
             states[f"l{i}"] = st

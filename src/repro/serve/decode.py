@@ -1,10 +1,17 @@
-"""Sampling and generation loops.
+"""Sampling, generation loops, and the batched ragged prefill.
 
 `generate` drives models/model.decode_step over a fixed number of tokens
 with per-sequence positions (a (B,) pos vector — sequences at different
 offsets decode in the same batch, the substrate for continuous batching in
 engine.py). The loop is a lax.scan so the whole generation compiles to one
 program (no per-token dispatch overhead).
+
+`packed_prefill` prefills a ragged batch of prompts in ONE packed forward:
+prompts are padded to a tile multiple, concatenated along S, and attention
+runs block-diagonally over the PackedSchedule grid (core/packing.py) —
+sum_r tri(n_r) tiles instead of R separate launches or R * tri(n_max)
+padded ones. The engine splices the returned per-layer KV states into its
+slot caches (Engine._admit_batch).
 """
 
 from __future__ import annotations
@@ -14,7 +21,9 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.kernels.tri_attn import ops as attn_ops
 from repro.models import model as MD
 
 
@@ -75,3 +84,62 @@ def jit_generate(params, cfg, cache, first_tokens, start_pos, n_tokens,
                  key, temperature=0.0, top_k=None):
     return generate(params, cfg, cache, first_tokens, start_pos, n_tokens,
                     key=key, temperature=temperature, top_k=top_k)
+
+
+# ---------------------------------------------------------------------------
+# Batched ragged prefill (one packed launch for R prompts)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "psched", "attn_impl"))
+def _packed_forward(params, cfg, tokens, positions, psched, attn_impl):
+    """Jitted packed forward: (1, S_total) tokens + per-request-restarting
+    positions -> (hidden, per-layer states). Compiled once per distinct
+    packing (psched is static); MoE runs drop-free (serving semantics)."""
+    hidden, _, states = MD.forward(
+        params, cfg, {"tokens": tokens}, attn_impl=attn_impl, remat=False,
+        collect_state=True, positions=positions, packed=psched,
+        full_capacity=True)
+    return hidden, states
+
+
+def packed_prefill(params, cfg, prompts, *, block: int = 16,
+                   attn_impl: str = "scan", bucket: int = 0):
+    """Prefill a ragged prompt batch in ONE packed launch.
+
+    prompts: list of (S_r,) int token arrays (arbitrary mixed lengths).
+    Each is zero-padded to a multiple of ``block`` (padding sits at the
+    request's causal tail: real tokens never attend to it and its rows are
+    never spliced out). Returns (psched, starts, lens, hidden, states):
+    request r's tokens occupy packed rows [starts[r], starts[r] + lens[r])
+    of hidden and of every (n_sl, 1, S_total, ...) KV state leaf.
+
+    The forward is jitted with the packing STATIC, so every distinct tuple
+    of padded lengths compiles (and caches) a new program. ``bucket`` > 0
+    rounds each padded length up to a multiple of it, trading a bounded
+    amount of extra (inert) tail padding for far fewer distinct shapes —
+    set it under compile-bound serving traffic (e.g. bucket = 4 * block).
+
+    Only valid for attention token mixers: recurrent state (mamba/rwkv)
+    carries across the packed concatenation and would leak between
+    requests — Engine gates on cfg.layer_kinds before calling this.
+    """
+    assert all(k == "attn" for k in cfg.layer_kinds), (
+        "packed_prefill requires attention-only token mixers; recurrent "
+        "state would leak across the packed request boundary")
+    lens = [int(len(p)) for p in prompts]
+    quantum = max(block, -(-bucket // block) * block if bucket else block)
+    pads = [-(-s // quantum) * quantum for s in lens]
+    starts = list(np.cumsum([0] + pads[:-1]))
+    s_total = sum(pads)
+    tokens = np.zeros((1, s_total), np.int32)
+    positions = np.zeros((s_total,), np.int32)
+    for st, pad, p in zip(starts, pads, prompts):
+        tokens[0, st:st + len(p)] = np.asarray(p, np.int32)
+        positions[st:st + pad] = np.arange(pad)
+    psched = attn_ops.make_packed_sched(pads, block=block,
+                                        window=cfg.sliding_window)
+    hidden, states = _packed_forward(params, cfg, jnp.asarray(tokens),
+                                     jnp.asarray(positions), psched,
+                                     attn_impl)
+    return psched, starts, lens, hidden, states

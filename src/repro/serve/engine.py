@@ -3,9 +3,16 @@
 A fixed batch of B slots decodes in lockstep; each slot carries its own
 absolute position (per-sequence pos vector — see decode_attention), so a
 finished slot can be refilled with a new request without draining the
-batch. Prefill runs per-request through the full-sequence forward (the
-triangular/prefix Pallas-or-scan attention) and splices the resulting KV
-into the slot.
+batch.
+
+Admission is BULK: each admit round gathers every free slot's next request
+and prefills them all in ONE packed ragged launch (_admit_batch ->
+decode.packed_prefill over the core/packing PackedSchedule grid —
+sum_r tri(n_r) tiles, no per-request launches, no pad-to-max), then
+splices each request's KV rows out of the packed states into its slot's
+cache. Architectures with recurrent token mixers (mamba/rwkv) fall back to
+the sequential per-token prefill: their state is not splice-able across a
+packed concatenation.
 
 This is the TPU-idiomatic middle ground between static batching and paged
 attention: contiguous per-slot caches (DMA-friendly, no page tables), with
@@ -40,7 +47,9 @@ class Engine:
 
     def __init__(self, params, cfg, *, slots: int = 4, max_len: int = 512,
                  cache_dtype=jnp.float32, temperature: float = 0.0,
-                 seed: int = 0):
+                 seed: int = 0, prefill_mode: str = "packed",
+                 prefill_block: int = 16, prefill_impl: str = "scan",
+                 prefill_bucket: int = 0):
         self.params, self.cfg = params, cfg
         self.B, self.max_len = slots, max_len
         self.cache = MD.init_cache(cfg, slots, max_len, cache_dtype)
@@ -52,6 +61,21 @@ class Engine:
         self.finished: List[Request] = []
         self.temperature = temperature
         self.key = jax.random.key(seed)
+        # packed ragged prefill needs splice-able (attention) token mixers;
+        # recurrent archs keep the sequential per-token path.
+        assert prefill_mode in ("packed", "sequential")
+        self.prefill_mode = prefill_mode if all(
+            k == "attn" for k in cfg.layer_kinds) else "sequential"
+        self.prefill_block = prefill_block
+        self.prefill_impl = prefill_impl
+        # length-bucketing quantum for the packed forward's static shapes:
+        # 0 = exact block padding (one compile per distinct length tuple);
+        # set >0 under compile-bound traffic (see decode.packed_prefill).
+        self.prefill_bucket = prefill_bucket
+        # observability: the acceptance claim is ONE packed launch per
+        # admit round regardless of how many slots were refilled.
+        self.stats = {"prefill_launches": 0, "prefill_requests": 0,
+                      "prefill_tokens": 0, "admit_rounds": 0}
         self._decode = jax.jit(
             lambda p, c, t, pos: MD.decode_step(p, cfg, c, t, pos))
 
@@ -85,11 +109,64 @@ class Engine:
         self.pos = self.pos.at[slot].set(len(toks) - 1)
         self.slot_req[slot] = req
         self.remaining[slot] = req.max_new
+        self.stats["prefill_launches"] += len(toks)
+        self.stats["prefill_requests"] += 1
+        self.stats["prefill_tokens"] += len(toks)
+
+    def _splice_slot(self, slot: int, states, start: int, length: int):
+        """Copy one request's KV rows [start, start+length) out of the
+        packed prefill states into this slot's cache.
+
+        KV leaves are (n_sl, 1, S_total, Hkv, hd) against a cache of
+        (n_sl, B, S_slots, Hkv, hd). Sliding-window caches are rolling
+        buffers (slot p % W holds position p): keep the last W rows and
+        roll them into decode's slot order, mirroring prefill_cache."""
+        def fill(c, st):
+            if not (c.ndim == 5 and st.ndim == 5):
+                return c  # non-KV leaf: unreachable on the packed path
+            s_slots = c.shape[2]
+            seg = st[:, 0, start:start + length]  # (n_sl, len, Hkv, hd)
+            if length > s_slots:
+                keep = seg[:, length - s_slots:]
+                keep = jnp.roll(keep, shift=length % s_slots, axis=1)
+                return c.at[:, slot, :s_slots].set(keep.astype(c.dtype))
+            return c.at[:, slot, :length].set(seg.astype(c.dtype))
+
+        self.cache = jax.tree.map(fill, self.cache, states)
+
+    def _admit_batch(self, pairs):
+        """Bulk admission: ONE packed ragged-prefill launch for every
+        (slot, request) pair, then per-slot KV splicing. Replaces the
+        O(sum of prompt lengths) sequential decode-step loop with a single
+        sum_r tri(n_r)-tile launch (see serve/decode.packed_prefill)."""
+        prompts = [req.prompt for _, req in pairs]
+        _, starts, lens, _, states = D.packed_prefill(
+            self.params, self.cfg, prompts, block=self.prefill_block,
+            attn_impl=self.prefill_impl, bucket=self.prefill_bucket)
+        self.stats["prefill_launches"] += 1
+        self.stats["prefill_requests"] += len(pairs)
+        self.stats["prefill_tokens"] += sum(lens)
+        for (slot, req), start, length in zip(pairs, starts, lens):
+            self._splice_slot(slot, states, start, length)
+            self.last_tok = self.last_tok.at[slot, 0].set(
+                int(req.prompt[-1]))
+            self.pos = self.pos.at[slot].set(length - 1)
+            self.slot_req[slot] = req
+            self.remaining[slot] = req.max_new
 
     def _admit(self):
+        pairs = []
         for slot in range(self.B):
             if self.slot_req[slot] is None and self.queue:
-                self._prefill_into_slot(slot, self.queue.pop(0))
+                pairs.append((slot, self.queue.pop(0)))
+        if not pairs:
+            return
+        self.stats["admit_rounds"] += 1
+        if self.prefill_mode == "packed":
+            self._admit_batch(pairs)
+        else:
+            for slot, req in pairs:
+                self._prefill_into_slot(slot, req)
 
     # -- decode loop ---------------------------------------------------------
     def step(self):

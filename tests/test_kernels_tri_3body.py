@@ -97,3 +97,56 @@ def test_packed_memory_vs_cube():
     n = 16
     ratio = M.tet(n) / n ** 3
     assert 1 / 6 <= ratio <= 1 / 6 + 1.0 / n
+
+
+# ---------------------------------------------------------------------------
+# strict a > b > c masking (in-kernel, ROADMAP open item)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", ["pallas", "scan", "ref"])
+def test_strict_packed_matches_strict_ref(impl):
+    x = jax.random.normal(jax.random.PRNGKey(11), (24, 3), jnp.float32)
+    got = OPS.three_body(x, 8, impl=impl, strict=True)
+    want = REF.three_body_packed_ref(x, 8, strict=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-4)
+
+
+def test_strict_changes_only_diagonal_tiles():
+    """Strictness is an IN-KERNEL diagonal-tile mask: off-diagonal tile
+    triples (i > j > k) are bitwise untouched."""
+    x = jax.random.normal(jax.random.PRNGKey(12), (32, 4), jnp.float32)
+    loose = np.asarray(OPS.three_body(x, 8, impl="scan"))
+    strict = np.asarray(OPS.three_body(x, 8, impl="scan", strict=True))
+    n = 4
+    for lam in range(M.tet(n)):
+        i, j, k = M.tet_map(lam)
+        if i > j > k:
+            assert loose[lam, 0] == strict[lam, 0], (lam, i, j, k)
+        else:
+            # diagonal tiles lose their degenerate triples (generic x)
+            assert loose[lam, 0] != strict[lam, 0], (lam, i, j, k)
+
+
+@pytest.mark.parametrize("impl", ["pallas", "scan", "ref", "bb3",
+                                  "bb3_scan"])
+def test_strict_total_matches_distinct_triple_oracle(impl):
+    """strict total == sum over a > b > c of the dense oracle — each
+    unordered triple of distinct points exactly once, with NO post-hoc
+    multiplicity correction."""
+    x = jax.random.normal(jax.random.PRNGKey(13), (24, 3), jnp.float32)
+    tot = float(OPS.three_body_total(x, 8, impl=impl, strict=True))
+    want = float(REF.three_body_total_strict_ref(x))
+    np.testing.assert_allclose(tot, want, rtol=1e-5)
+
+
+def test_strict_singleton_tile_is_zero():
+    """One tile (i == j == k == 0) with block == n_rows: the only
+    surviving triples are a > b > c inside the tile."""
+    x = jax.random.normal(jax.random.PRNGKey(14), (8, 2), jnp.float32)
+    got = float(OPS.three_body(x, 8, impl="scan", strict=True)[0, 0])
+    g = np.asarray(REF.gram(x))
+    want = sum(g[a, b] * g[b, c] * g[a, c]
+               for a in range(8) for b in range(a) for c in range(b))
+    np.testing.assert_allclose(got, want, rtol=1e-5)

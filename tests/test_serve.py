@@ -53,6 +53,43 @@ def test_engine_matches_sequential_decode():
         assert results[uid] == ref, (uid, results[uid], ref)
 
 
+def test_engine_packed_prefill_matches_sequential():
+    """The batched ragged prefill must be token-for-token identical to the
+    sequential per-request prefill on a mixed-length queue, while issuing
+    exactly ONE packed launch per admit round."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(1, cfg.vocab_size, size=s).astype(np.int32)
+               for s in (9, 3, 17, 5, 12)]
+
+    def run(mode, bucket=0):
+        eng = Engine(params, cfg, slots=2, max_len=48, temperature=0.0,
+                     prefill_mode=mode, prefill_block=4,
+                     prefill_bucket=bucket)
+        for uid, p in enumerate(prompts):
+            eng.submit(p, max_new=4, uid=uid)
+        return eng.run(), eng.stats
+
+    res_packed, st_packed = run("packed")
+    res_seq, st_seq = run("sequential")
+    assert res_packed == res_seq
+    # length bucketing only adds inert tail padding: same tokens out
+    res_bucket, _ = run("packed", bucket=16)
+    assert res_bucket == res_seq
+    # one packed launch per admit round vs one decode step per prompt token
+    assert st_packed["prefill_launches"] == st_packed["admit_rounds"]
+    assert st_seq["prefill_launches"] == sum(len(p) for p in prompts)
+    assert st_packed["prefill_requests"] == len(prompts)
+
+
+def test_engine_recurrent_arch_falls_back_to_sequential():
+    """Recurrent token mixers cannot splice packed state across request
+    boundaries; the engine must silently keep the sequential path."""
+    cfg, params = _setup("rwkv6-1.6b")
+    eng = Engine(params, cfg, slots=2, max_len=32, prefill_mode="packed")
+    assert eng.prefill_mode == "sequential"
+
+
 def test_engine_more_requests_than_slots_refills():
     cfg, params = _setup("rwkv6-1.6b")  # recurrent-state engine path
     eng = Engine(params, cfg, slots=2, max_len=32, temperature=0.0)
