@@ -1,4 +1,4 @@
-"""Packed multi-domain launch vs the two serving baselines.
+"""Packed multi-domain launch vs the serving baselines (prefill + decode).
 
 A ragged prefill batch of R prompts with mixed lengths can be attended
 three ways:
@@ -13,14 +13,21 @@ three ways:
   padded-LTM  — pad-to-max but triangular: R * tri(n_max) blocks (better,
                 still O(R * n_max^2) with ~half the constant).
 
+``--decode`` benchmarks the DECODE-time analogue at position-skew ratios
+{1x, 4x, 16x}: a packed mixed-position round (each slot over only its own
+valid KV prefix — sum_b ceil(len_b / blk) tiles) vs the lockstep
+pad-to-max decode (every slot pays max_b tiles; the full-cache masked
+einsum is its dense realization).
+
 Structural columns are hardware-independent block counts; wall-clock times
 the scan impls on CPU (the Pallas kernels time the same schedules on TPU).
 
-  PYTHONPATH=src python -m benchmarks.bench_packed
+  PYTHONPATH=src python -m benchmarks.bench_packed [--decode] [--smoke]
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 
 import jax
@@ -112,6 +119,83 @@ def run(lens=(192, 48, 320, 96), block: int = 16, h: int = 2, hkv: int = 1,
     return rec
 
 
+# ---------------------------------------------------------------------------
+# Packed mixed-position decode vs lockstep pad-to-max decode
+# ---------------------------------------------------------------------------
+
+
+def run_decode(skews=(1, 4, 16), base_len: int = 256, slots: int = 4,
+               block: int = 16, h: int = 2, hkv: int = 1, d: int = 16,
+               out_path: str | None = None) -> list:
+    """One decode round per skew ratio K: slot 0 sits at KV length
+    ``base_len``, the other slots at ``base_len / K`` — the packed round
+    covers sum_b ceil(len_b / blk) tiles, the lockstep pad-to-max round
+    B * ceil(base_len / blk)."""
+    from repro.serve import decode as D
+
+    rows = []
+    for skew in skews:
+        short = max(1, base_len // skew)
+        kv_lens = [base_len] + [short] * (slots - 1)
+        s_cache = -(-base_len // block) * block
+        kq, kk, kv = jax.random.split(jax.random.PRNGKey(skew), 3)
+        q = jax.random.normal(kq, (slots, h, d), jnp.float32)
+        kc = jax.random.normal(kk, (slots, s_cache, hkv, d), jnp.float32)
+        vc = jax.random.normal(kv, (slots, s_cache, hkv, d), jnp.float32)
+        tbl, needed = OPS.make_decode_table(
+            kv_lens, list(range(slots)), blk=block, n_members=slots + 1,
+            n_slots=slots, s_cache=s_cache)
+        cap = D.round_capacity(needed)
+        tiles_packed = needed
+        tiles_padded = slots * max(-(-kl // block) for kl in kv_lens)
+
+        def timed(impl):
+            spec = OPS.DecodeRoundSpec(n_members=slots + 1, capacity=cap,
+                                       blk=block, impl=impl)
+            fn = jax.jit(lambda a, b, c, t: OPS.packed_decode_attention(
+                a, b, c, t, spec))
+            return _time(fn, q, kc, vc, jnp.asarray(tbl))
+
+        t_packed = timed("scan")
+        # 'ref' IS the lockstep baseline: full-cache masked einsum, every
+        # slot padded to S_cache regardless of its own position.
+        t_lockstep = timed("ref")
+        rows.append({
+            "skew": skew, "kv_lens": kv_lens, "block": block,
+            "slots": slots,
+            "tiles": {"packed": tiles_packed,
+                      "lockstep_padded": tiles_padded},
+            "waste_vs_packed": tiles_padded / tiles_packed,
+            "times_ms": {"packed": t_packed * 1e3,
+                         "lockstep": t_lockstep * 1e3},
+        })
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+def main_decode(smoke: bool = False, out_path="artifacts/bench_packed_decode"
+                                              ".json"):
+    rows = run_decode(base_len=64 if smoke else 256,
+                      block=8 if smoke else 16, out_path=out_path)
+    for r in rows:
+        t = r["tiles"]
+        print(f"  skew {r['skew']:3d}x lens={r['kv_lens']}: "
+              f"tiles packed={t['packed']} "
+              f"lockstep-padded={t['lockstep_padded']} "
+              f"({r['waste_vs_packed']:.2f}x waste) "
+              f"t_packed={r['times_ms']['packed']:.2f}ms "
+              f"t_lockstep={r['times_ms']['lockstep']:.2f}ms")
+    hi = rows[-1]["tiles"]
+    assert hi["packed"] < hi["lockstep_padded"], (
+        "packed decode must issue fewer tiles than lockstep pad-to-max "
+        "under position skew")
+    print(f"  OK: {hi['packed']} < {hi['lockstep_padded']} tiles at "
+          f"{rows[-1]['skew']}x skew")
+    return rows
+
+
 def main():
     rec = run(out_path="artifacts/bench_packed.json")
     b = rec["blocks"]
@@ -129,4 +213,16 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--decode", action="store_true",
+                    help="benchmark the packed mixed-position decode round")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes (CI tier, scripts/check.sh)")
+    args = ap.parse_args()
+    import os
+
+    os.makedirs("artifacts", exist_ok=True)
+    if args.decode:
+        main_decode(smoke=args.smoke)
+    else:
+        main()

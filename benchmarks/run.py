@@ -6,7 +6,9 @@
   bench_tet_mapping — the 3D analogue: BB-3D (n^3) vs tetrahedral launch
   bench_edm         — paper Fig. 5 (EDM, d = 1..4 features, LTM vs BB)
   bench_attention   — the technique on causal flash attention (tiles/FLOPs/I)
-  bench_packed      — packed ragged batch vs per-request vs padded launches
+  bench_packed      — packed ragged batch vs per-request vs padded launches,
+                      plus --decode: packed mixed-position decode rounds vs
+                      lockstep pad-to-max at skew {1x, 4x, 16x}
   bench_roofline    — §Roofline table from the dry-run artifacts (if present)
 
 --smoke is the CI tier: tiny n, scan impls only, seconds not minutes —
@@ -99,6 +101,13 @@ def main(argv=None):
           f"padded-bb={b['padded_bb']} padded-ltm={b['padded_ltm']} "
           f"t_packed={t['packed']:.1f}ms t_per={t['per_request']:.1f}ms "
           f"t_padded={t['padded_ltm_batch']:.1f}ms")
+
+    print("=" * 72)
+    print("bench_packed --decode (packed mixed-position vs lockstep decode)")
+    print("=" * 72)
+    bench_packed.main_decode(
+        smoke=args.smoke or args.fast,
+        out_path="artifacts/bench_packed_decode.json")
 
     print("=" * 72)
     print("bench_roofline (dry-run artifacts)")

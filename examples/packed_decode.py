@@ -1,0 +1,55 @@
+"""Packed mixed-position decode: one launch per round, zero pad tiles.
+
+The lockstep decode pads every slot to the same work: each of B slots
+attends the full cache buffer whatever its own position, so a batch that
+mixes a long sequence with short ones burns tiles exactly like a
+bounding-box grid burns blocks. The packed decode round (core/packing's
+decode_round of RowSchedule members, serve/decode.decode_step_packed)
+gives each live slot only its own valid KV prefix — sum_b ceil(len_b/blk)
+tiles — while emitting token-identical streams.
+
+  PYTHONPATH=src python examples/packed_decode.py
+"""
+
+import jax
+import numpy as np
+
+from repro.configs import registry as REG
+from repro.models import model as MD
+from repro.serve.engine import Engine
+
+
+def main():
+    cfg = REG.smoke_config("yi-9b")
+    params = MD.init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+    # heavy position skew: one long prompt, several short ones
+    prompts = [rng.integers(1, cfg.vocab_size, size=s).astype(np.int32)
+               for s in (41, 3, 6, 4)]
+
+    results, stats = {}, {}
+    for mode in ("packed", "lockstep"):
+        eng = Engine(params, cfg, slots=4, max_len=64, temperature=0.0,
+                     prefill_block=8, decode_mode=mode, decode_block=8)
+        for uid, p in enumerate(prompts):
+            eng.submit(p, max_new=8, uid=uid)
+        results[mode] = eng.run()
+        stats[mode] = eng.stats
+        print(f"{mode:9s} decode rounds: {eng.stats['decode_rounds']:3d}  "
+              f"packed launches: {eng.stats['decode_packed_launches']:3d}  "
+              f"tiles packed/padded: {eng.stats['decode_tiles_packed']}/"
+              f"{eng.stats['decode_tiles_padded']}")
+
+    assert results["packed"] == results["lockstep"], \
+        "packed decode must be token-for-token identical"
+    st = stats["packed"]
+    assert st["decode_packed_launches"] == st["decode_rounds"]
+    assert st["decode_tiles_packed"] < st["decode_tiles_padded"]
+    saved = 1 - st["decode_tiles_packed"] / st["decode_tiles_padded"]
+    print(f"packed_decode OK — identical tokens, {saved:.0%} of pad-to-max "
+          f"decode tiles eliminated "
+          f"({st['decode_tiles_packed']} vs {st['decode_tiles_padded']})")
+
+
+if __name__ == "__main__":
+    main()

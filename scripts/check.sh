@@ -21,4 +21,9 @@ python -m pytest -x -q -p _offline_guard "$@"
 if [ "$#" -eq 0 ]; then
     echo "== benchmarks --smoke =="
     python -m benchmarks.run --smoke
+    # The packed mixed-position decode path also has its own CLI entry;
+    # exercise it directly so the --decode argparse surface cannot rot
+    # (benchmarks.run --smoke already covers the underlying run_decode).
+    echo "== bench_packed --decode --smoke =="
+    python -m benchmarks.bench_packed --decode --smoke
 fi

@@ -44,6 +44,10 @@ form parameterized by integers gathered from per-member tables:
   * BandSchedule(n, w)         ->  band family, w = min(w, n)
   * PrefixSchedule(n, p), p>0  ->  prefix family (flat head + tri tail)
   * PrefixSchedule(n, p=0)     ->  band family, w = n (pure triangle)
+  * RowSchedule(n)             ->  prefix family, p = n (the member owns
+                                   only n lambdas, so the map never leaves
+                                   the flat head's row 0 — a 1 x n
+                                   rectangle, the decode-round member)
 
 ``band_map`` and ``prefix_full_map`` (core.mapping) are already exact for
 traced parameters, so the traced index_map is: binary search (O(log R)) +
@@ -69,11 +73,13 @@ from repro.core.schedule import (
     BandSchedule,
     BlockSchedule,
     PrefixSchedule,
+    RowSchedule,
     TriangularSchedule,
 )
 
 # Member kinds the parametric (branch-free traced) delegation covers.
-SUPPORTED_MEMBERS = (TriangularSchedule, BandSchedule, PrefixSchedule)
+SUPPORTED_MEMBERS = (TriangularSchedule, BandSchedule, PrefixSchedule,
+                     RowSchedule)
 
 
 def _member_params(m: BlockSchedule) -> Tuple[int, int, int]:
@@ -82,6 +88,11 @@ def _member_params(m: BlockSchedule) -> Tuple[int, int, int]:
     w is the band-family width in TILES (w == n for full triangles), p the
     prefix-family width in TILES (p == 0 selects the band family).
     """
+    if isinstance(m, RowSchedule):
+        # Single query row over n KV tiles: literally the first row of a
+        # full-width prefix member ((n, n, n)); locals never leave row 0
+        # because the member owns only n lambdas.
+        return m.n, m.n, m.n
     if isinstance(m, BandSchedule):
         return m.n, min(m.w, m.n), 0
     if isinstance(m, PrefixSchedule):
@@ -115,7 +126,9 @@ def request_from_starts(lam, starts, num_requests: int):
     ceil(log2 R) probes, branch-free (where-selects), scalar-core friendly.
     starts must be ascending with starts[0] == 0 and lam < total blocks.
     """
-    lo = jnp.zeros((), jnp.int32)
+    # zeros_like(lam): keep lam's shape so a single-member schedule (R = 1,
+    # zero search trips) still returns r broadcast against vectorized lam
+    lo = jnp.zeros_like(jnp.asarray(lam), jnp.int32)
     hi = jnp.asarray(num_requests - 1, jnp.int32)
     for _ in range((num_requests - 1).bit_length()):
         mid = (lo + hi + 1) // 2
@@ -196,6 +209,18 @@ class PackedSchedule(BlockSchedule):
     def from_members(cls, members) -> "PackedSchedule":
         members = tuple(members)
         return cls(n=sum(m.n for m in members), members=members)
+
+    @classmethod
+    def decode_round(cls, kv_tiles) -> "PackedSchedule":
+        """One packed mixed-position DECODE round.
+
+        kv_tiles[r] is active slot r's valid KV prefix in tiles; member r
+        becomes the RowSchedule over it (its one new token vs its own KV).
+        num_blocks == sum_r kv_tiles_r — the round's exact tile count,
+        against the lockstep decode's R * max_r kv_tiles_r pad-to-max:
+        the same O(pad) -> 0 step the paper's g(lambda) takes for one
+        triangle, applied to the decode batch."""
+        return cls.from_members(RowSchedule(n=int(t)) for t in kv_tiles)
 
     # -- static tables -------------------------------------------------------
     @property

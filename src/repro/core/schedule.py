@@ -27,6 +27,8 @@ Schedules provided:
   Dense3DSchedule     — BB-3D baseline (full n^3 cube, simplex guard).
   BandSchedule        — sliding-window trapezoid (beyond-paper).
   PrefixSchedule      — prefix-causal (VLM image prefix; beyond-paper).
+  RowSchedule         — single query row over n KV tiles (decode-round
+                        member: one token vs its valid KV prefix).
   PackedSchedule      — concatenation of mixed ltm/band/prefix members into
                         one 1-D grid for ragged batches (core/packing.py;
                         register via make_schedule("packed", 0, members=...)).
@@ -255,6 +257,35 @@ class BandSchedule(BlockSchedule):
 
 
 @dataclasses.dataclass(frozen=True)
+class RowSchedule(BlockSchedule):
+    """A single query row over n KV tiles: the 1 x n rectangle {(0, j)}.
+
+    The decode-round member (beyond-paper): one new token attending its own
+    valid KV prefix of n tiles. Degenerate but load-bearing — a
+    PackedSchedule of RowSchedule members IS one packed mixed-position
+    decode round (PackedSchedule.decode_round), the single-token analogue
+    of the ragged-prefill concatenation. ``n`` is the KV extent in tiles
+    (the row length), not a square side."""
+
+    @property
+    def num_blocks(self) -> int:
+        return self.n
+
+    @property
+    def domain_blocks(self) -> int:
+        return self.n
+
+    def index_map(self, lam):
+        return lam * 0, lam  # (0, lam), traced-or-host polymorphic
+
+    def host_map(self, lam: int):
+        return 0, int(lam)
+
+    def segment_origin(self, i):
+        return i * self.n  # row 0 starts at 0; sentinel row 1 at n (seg_end)
+
+
+@dataclasses.dataclass(frozen=True)
 class PrefixSchedule(BlockSchedule):
     """Prefix-causal: causal triangle + bidirectional prefix rectangle.
 
@@ -416,6 +447,7 @@ def make_schedule(kind: str, n: int, **kw) -> BlockSchedule:
         "dense3d": Dense3DSchedule,
         "band": BandSchedule,
         "prefix": PrefixSchedule,
+        "row": RowSchedule,
         "utm": UTMSchedule,
         "rb": RBSchedule,
         "rec": RECSchedule,

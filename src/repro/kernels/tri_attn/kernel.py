@@ -13,6 +13,9 @@ Schedules: 'ltm' (causal), 'band' (sliding window, beyond-paper), 'prefix'
 machinery to the CONCATENATION of R ragged requests: one 1-D grid of
 sum_r blocks_r steps whose (7, R) member table rides in scalar-prefetch
 SMEM (core/packing.py supplies the O(log R) request search).
+packed_decode_fwd is the single-token variant — one mixed-position decode
+round per launch, the (4, R) RUNTIME member table in scalar-prefetch SMEM
+over a bucketed static capacity.
 
 All kernels accumulate in f32 VMEM scratch and are validated in interpret
 mode against ref.py (tests/test_kernels_tri_attn.py). TPU notes: block_q and
@@ -435,6 +438,136 @@ def packed_fwd(q, k, v, psched: PackedTriSched, *, sm_scale=None,
         interpret=interpret,
     )(tbl, q, k, v)
     return out, lse
+
+
+# ---------------------------------------------------------------------------
+# Packed mixed-position DECODE: one 1-D grid per decode round over the
+# concatenation of every active slot's valid KV prefix (core/packing's
+# decode_round lifted to the kernel). Unlike the prefill table (baked
+# constants — the packing is static per compile), the decode table is
+# RUNTIME data: positions advance every round, so the (4, R) member table
+# rides in as a scalar-prefetch SMEM operand and the grid is padded to a
+# static bucketed capacity. Rows:
+#   0 starts    cumulative tile offsets per member (ascending, starts[0]=0)
+#   1 slot      batch row of the member's KV cache / query / output
+#   2 kv_tiles  member tiles (emit at j == kv_tiles - 1); empty members
+#               (retired slots) carry 0, the pad member DECODE_NO_EMIT
+#   3 kv_len    valid KV tokens (token mask j*blk + t < kv_len); 0 = pad
+# Convention: the LAST member is always the pad member owning the grid
+# steps [needed, capacity); its slot is n_slots (the virtual garbage row
+# of the (B+1)-row output) and it never inits state destructively for a
+# live slot nor emits (kv_tiles sentinel).
+# ---------------------------------------------------------------------------
+
+
+DECODE_NO_EMIT = 2 ** 30  # pad-member kv_tiles sentinel: emit never fires
+
+
+def _decode_member(lam, tbl, n_members: int):
+    """lambda + (4, R) decode table -> (r, slot, j, kv_tiles, kv_len).
+
+    j is the member-local KV tile (RowSchedule members are single rows, so
+    the local lambda IS the column — no closed-form map needed). tbl may be
+    a jnp array or a Pallas SMEM ref."""
+    from repro.core import packing as PK
+
+    r = PK.request_from_starts(lam, _TableRow(tbl, 0), n_members)
+    return r, tbl[1, r], lam - tbl[0, r], tbl[2, r], tbl[3, r]
+
+
+def _packed_decode_kernel(tbl_ref, q_ref, k_ref, v_ref, o_ref,
+                          m_s, l_s, acc_s, *, n_members: int, blk: int,
+                          scale: float):
+    lam = pl.program_id(1)
+    _, _, j, kv_tiles, kv_len = _decode_member(lam, tbl_ref, n_members)
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, MASK_VALUE)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0].astype(jnp.float32)           # (1, d)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # (blk, d)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    kpos = j * blk + jax.lax.broadcasted_iota(jnp.int32, (1, blk), 1)
+    s = jnp.where(kpos < kv_len, s, MASK_VALUE)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_s[...] = l_s[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_s[...] = acc_s[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(j == kv_tiles - 1)
+    def _emit():
+        o_ref[0] = (acc_s[...] / l_s[...]).astype(o_ref.dtype)
+
+
+def packed_decode_fwd(q, k, v, tbl, *, capacity: int, blk: int,
+                      sm_scale=None, interpret=True):
+    """One packed launch for a whole mixed-position decode round.
+
+    q: (B, H, D) — each slot's single rotated query; k, v: (B, S_cache,
+    Hkv, D) — the NATIVE decode-cache layout (no transposes on the hot
+    path), new token already written. tbl: (4, R) runtime member table
+    (ops.make_decode_table). Grid is (H, capacity): sum_r kv_tiles_r live
+    steps + masked pad steps, vs the lockstep einsum's B * S_cache work.
+    Returns (B + 1, H, D): row B is the pad member's garbage row — callers
+    slice [:B] and mask by the member table's coverage.
+    """
+    b, h, d = q.shape
+    s_cache, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    assert s_cache % blk == 0, (s_cache, blk)
+    cache_tiles = s_cache // blk
+    scale = float(sm_scale if sm_scale is not None else 1.0 / (d ** 0.5))
+    n_members = tbl.shape[1]
+
+    def q_spec(h_, lam, tbl_):
+        _, slot, _, _, _ = _decode_member(lam, tbl_, n_members)
+        return (jnp.minimum(slot, b - 1), h_, 0)
+
+    def kv_spec(h_, lam, tbl_):
+        _, slot, j, _, _ = _decode_member(lam, tbl_, n_members)
+        return (jnp.minimum(slot, b - 1),
+                jnp.minimum(j, cache_tiles - 1), h_ // g, 0)
+
+    def o_spec(h_, lam, tbl_):
+        # pad member's slot == b: the extra garbage row, so pad steps can
+        # never flush stale VMEM over a live slot's emitted block.
+        _, slot, _, _, _ = _decode_member(lam, tbl_, n_members)
+        return (slot, h_, 0)
+
+    kernel = functools.partial(_packed_decode_kernel, n_members=n_members,
+                               blk=blk, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(h, capacity),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), q_spec),
+            pl.BlockSpec((1, blk, 1, d), kv_spec),
+            pl.BlockSpec((1, blk, 1, d), kv_spec),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), o_spec),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b + 1, h, d), q.dtype),
+        interpret=interpret,
+    )(tbl, q, k, v)
+    return out
 
 
 # ---------------------------------------------------------------------------

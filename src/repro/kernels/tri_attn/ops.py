@@ -13,19 +13,29 @@ the schedule kind from the mask parameters, and dispatches between:
 variant: R requests of mixed lengths concatenated along S, attended
 block-diagonally in ONE launch over the core/packing PackedSchedule grid
 (forward-only — the serving engine's bulk-admission prefill).
+
+``packed_decode_attention`` + ``make_decode_table`` + ``DecodeRoundSpec``
+are the DECODE-time analogue: one mixed-position decode round per launch,
+each live slot attending only its own valid KV prefix. Unlike the prefill
+pack the member table is runtime data (positions advance every round), so
+it rides as a traced array / scalar-prefetch SMEM operand over a
+statically bucketed grid capacity.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.tri_attn import kernel as K
 from repro.kernels.tri_attn import ref as R
 from repro.kernels.tri_attn import scan_impl as SC
-from repro.kernels.tri_attn.kernel import PackedTriSched, TriSched
+from repro.kernels.tri_attn.kernel import (DECODE_NO_EMIT, PackedTriSched,
+                                           TriSched)
 
 
 def make_sched(s_len: int, *, block_q: int, block_k: int, window=None,
@@ -115,6 +125,129 @@ def packed_prefill_attention(q, k, v, psched: PackedTriSched, *,
             base += s_r
         return jnp.concatenate(outs, axis=2)
     raise ValueError(f"unknown impl {impl!r}")
+
+
+# ---------------------------------------------------------------------------
+# Packed mixed-position decode (one launch per decode round)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeRoundSpec:
+    """STATIC half of a packed decode round (hashable — it is a jit static
+    arg). The dynamic half — which slots are live, at which KV lengths —
+    is the (4, R) member table built fresh each round by
+    ``make_decode_table`` and passed as a traced array, so positions can
+    advance every round without recompiling; only a change of capacity
+    bucket (or batch geometry) compiles a new program."""
+
+    n_members: int  # table width R: max live slots + 1 (the pad member)
+    capacity: int   # static grid size; >= the round's live tiles
+    blk: int        # KV tile edge (divides S_cache)
+    impl: str = "scan"
+
+
+def make_decode_table(kv_lens, slots, *, blk: int, n_members: int,
+                      n_slots: int, s_cache: int = 0):
+    """Build one decode round's (4, n_members) int32 member table.
+
+    kv_lens[i] is live slot ``slots[i]``'s valid KV prefix in TOKENS
+    (min(pos + 1, S_cache) — for rolling sliding-window buffers the valid
+    region is always a prefix of the buffer, so one length describes it).
+    Unused member columns are empty (0 tiles, skipped by the lambda
+    search); the last column is the pad member (slot == n_slots, the
+    garbage output row; kv_tiles == DECODE_NO_EMIT so it never emits).
+    Returns (table, needed) with ``needed`` the live tile count —
+    sum_r ceil(kv_len_r / blk), the number the lockstep pad-to-max round
+    would inflate to n_live * max_r ceil(kv_len_r / blk).
+    """
+    kv_lens = [int(s) for s in kv_lens]
+    slots = [int(s) for s in slots]
+    assert len(kv_lens) == len(slots) <= n_members - 1, (
+        f"{len(kv_lens)} live members need table width >= "
+        f"{len(kv_lens) + 1}, got {n_members}")
+    assert all(s >= 1 for s in kv_lens), "live slots attend >= 1 token"
+    # A kv_len beyond the cache would be silently corrupted downstream
+    # (the kernel clamps the tile INDEX in-bounds but the token mask
+    # would keep admitting the phantom tail) — reject it here, where the
+    # lengths are still host ints. Callers with a rolling SWA buffer must
+    # pre-clamp to min(pos + 1, S_cache).
+    if s_cache:
+        assert max(kv_lens) <= s_cache, (
+            f"kv_lens {kv_lens} exceed the KV cache ({s_cache} rows); "
+            f"clamp to min(pos + 1, S_cache)")
+    cols, cur = [], 0
+    for kl, sl in zip(kv_lens, slots):
+        t = -(-kl // blk)
+        cols.append((cur, sl, t, kl))
+        cur += t
+    while len(cols) < n_members - 1:
+        cols.append((cur, 0, 0, 0))
+    cols.append((cur, n_slots, DECODE_NO_EMIT, 0))
+    return np.asarray(cols, np.int32).T.copy(), cur
+
+
+def packed_decode_attention(q, k_cache, v_cache, tbl,
+                            spec: DecodeRoundSpec, *, sm_scale=None,
+                            interpret: bool = True):
+    """Single-token attention for a whole mixed-position decode round.
+
+    q: (B, H, D) rotated queries (one new token per slot); k_cache,
+    v_cache: (B, S_cache, Hkv, D) native cache layout with the new token
+    already written. Each live slot attends ONLY its own valid KV prefix:
+    sum_r ceil(kv_len_r / blk) tiles in ONE launch, vs the lockstep
+    einsum's B * S_cache pad-to-max. Slots without a live member return
+    zeros. impl: 'pallas' (member table via scalar-prefetch SMEM),
+    'scan' (CPU lax.scan mirror), 'ref' (masked-einsum oracle).
+    """
+    b, h, d = q.shape
+    s_cache = k_cache.shape[1]
+    scale = float(sm_scale if sm_scale is not None else 1.0 / (d ** 0.5))
+    assert tbl.shape == (4, spec.n_members), (tbl.shape, spec.n_members)
+    assert s_cache % spec.blk == 0, (s_cache, spec.blk)
+    assert spec.capacity >= 1
+    if spec.impl == "pallas":
+        full = K.packed_decode_fwd(q, k_cache, v_cache, tbl,
+                                   capacity=spec.capacity, blk=spec.blk,
+                                   sm_scale=scale, interpret=interpret)
+        covered = _covered_slots(tbl, b)
+        return jnp.where(covered[:, None, None], full[:b], 0)
+    if spec.impl == "scan":
+        return SC.packed_decode_scan(q, k_cache, v_cache, tbl,
+                                     capacity=spec.capacity, blk=spec.blk,
+                                     n_members=spec.n_members, scale=scale)
+    if spec.impl == "ref":
+        kv_len = _slot_kv_lens(tbl, b)
+        valid = jnp.arange(s_cache)[None, :] < kv_len[:, None]  # (B, S)
+        out = _masked_decode_einsum(q, k_cache, v_cache, valid, scale)
+        return jnp.where(kv_len[:, None, None] > 0, out, 0)
+    raise ValueError(f"unknown impl {spec.impl!r}")
+
+
+def _covered_slots(tbl, b):
+    """(B,) bool: slots owned by some live member (scatter-max over the
+    table; the pad member's slot == B lands in the dropped extra row)."""
+    return jnp.zeros((b + 1,), bool).at[tbl[1]].max(tbl[3] > 0)[:b]
+
+
+def _slot_kv_lens(tbl, b):
+    """(B,) int32 valid KV length per slot (0 where no live member)."""
+    return jnp.zeros((b + 1,), jnp.int32).at[tbl[1]].max(tbl[3])[:b]
+
+
+def _masked_decode_einsum(q, k_cache, v_cache, valid, scale):
+    """Lockstep-style full-cache masked attention (the decode oracle):
+    q (B, H, D), caches (B, S, Hkv, D), valid (B, S) -> (B, H, D)."""
+    b, h, d = q.shape
+    hkv = k_cache.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg,
+                   k_cache.astype(jnp.float32)) * scale
+    s = jnp.where(valid[:, None, None, :], s, R.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, h, d).astype(q.dtype)
 
 
 @functools.lru_cache(maxsize=None)

@@ -25,6 +25,7 @@ from repro.kernels.tri_attn.kernel import (
     MASK_VALUE,
     PackedTriSched,
     TriSched,
+    _decode_member,
     _packed_decode,
     _packed_token_mask,
     _token_mask,
@@ -164,6 +165,71 @@ def make_packed_scan_attention(psched: PackedTriSched, scale: float):
         return out_g.reshape(b, h, s, d)
 
     return attn
+
+
+def packed_decode_scan(q, k, v, tbl, *, capacity: int, blk: int,
+                       n_members: int, scale: float):
+    """Packed mixed-position decode round as one lax.scan (the CPU path).
+
+    Mirrors the packed decode Pallas kernel 1:1 — same member table, same
+    tile enumeration, same online-softmax order — but vectorizes the H axis
+    in one pass instead of a grid dimension. q: (B, H, D); k, v:
+    (B, S_cache, Hkv, D) native cache layout; tbl: (4, R) TRACED member
+    table (runtime data, the whole round recompiles only when the static
+    ``capacity`` bucket changes). Returns (B, H, D) with slots not covered
+    by any member left zero."""
+    b, h, d = q.shape
+    s_cache, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    cache_tiles = s_cache // blk
+
+    def step(carry, lam):
+        m, l, acc, out = carry
+        _, slot, j, kv_tiles, kv_len = _decode_member(lam, tbl, n_members)
+        slot_c = jnp.minimum(slot, b - 1)
+        j_c = jnp.minimum(j, cache_tiles - 1)
+        reset = j == 0
+        m = jnp.where(reset, MASK_VALUE, m)
+        l = jnp.where(reset, 0.0, l)
+        acc = jnp.where(reset, 0.0, acc)
+
+        qs = jax.lax.dynamic_slice(
+            q, (slot_c, 0, 0), (1, h, d))[0].astype(jnp.float32)
+        kb = jax.lax.dynamic_slice(
+            k, (slot_c, j_c * blk, 0, 0),
+            (1, blk, hkv, d))[0].astype(jnp.float32)  # (blk, Hkv, D)
+        vb = jax.lax.dynamic_slice(
+            v, (slot_c, j_c * blk, 0, 0), (1, blk, hkv, d))[0].astype(
+            jnp.float32)
+        qg = qs.reshape(hkv, g, d)
+        s = jnp.einsum("kgd,tkd->kgt", qg, kb,
+                       preferred_element_type=jnp.float32) * scale
+        kpos = j * blk + jnp.arange(blk, dtype=jnp.int32)
+        s = jnp.where(kpos[None, None, :] < kv_len, s, MASK_VALUE)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum(
+            "kgt,tkd->kgd", p, vb, preferred_element_type=jnp.float32)
+
+        # Emit-gated (unlike _fwd_cell's unconditional write): the pad
+        # member shares slot clamps with live slots, so only a member's
+        # last tile may touch the output.
+        norm = (acc / l).reshape(1, h, d).astype(out.dtype)
+        upd = jax.lax.dynamic_update_slice(out, norm, (slot_c, 0, 0))
+        out = jnp.where(j == kv_tiles - 1, upd, out)
+        return (m_new, l, acc, out), None
+
+    init = (
+        jnp.full((hkv, g, 1), MASK_VALUE, jnp.float32),
+        jnp.zeros((hkv, g, 1), jnp.float32),
+        jnp.zeros((hkv, g, d), jnp.float32),
+        jnp.zeros((b, h, d), q.dtype),
+    )
+    (_, _, _, out), _ = jax.lax.scan(
+        step, init, jnp.arange(capacity, dtype=jnp.int32))
+    return out
 
 
 def _dq_cell(q, k, v, do, lse, delta, sched: TriSched, scale):

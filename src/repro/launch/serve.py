@@ -33,6 +33,11 @@ def main(argv=None):
                     help="packed = one ragged launch per admit round "
                          "(attention archs); sequential = per-token loop")
     ap.add_argument("--prefill-block", type=int, default=16)
+    ap.add_argument("--decode-mode", default="auto",
+                    choices=["auto", "packed", "lockstep"],
+                    help="auto = packed mixed-position decode on "
+                         "position-skewed rounds, lockstep otherwise")
+    ap.add_argument("--decode-block", type=int, default=16)
     args = ap.parse_args(argv)
 
     cfg = REG.smoke_config(args.arch)
@@ -40,7 +45,9 @@ def main(argv=None):
     engine = Engine(params, cfg, slots=args.slots, max_len=args.max_len,
                     temperature=args.temperature, seed=args.seed,
                     prefill_mode=args.prefill_mode,
-                    prefill_block=args.prefill_block)
+                    prefill_block=args.prefill_block,
+                    decode_mode=args.decode_mode,
+                    decode_block=args.decode_block)
 
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
@@ -61,6 +68,11 @@ def main(argv=None):
           f"launches for {st['prefill_requests']} requests / "
           f"{st['prefill_tokens']} tokens over {st['admit_rounds']} "
           f"admit rounds")
+    print(f"decode[{engine.decode_mode}]: {st['decode_rounds']} rounds "
+          f"({st['decode_packed_launches']} packed / "
+          f"{st['decode_lockstep_launches']} lockstep), tiles "
+          f"{st['decode_tiles_packed']} packed vs "
+          f"{st['decode_tiles_padded']} pad-to-max")
     return results
 
 

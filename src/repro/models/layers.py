@@ -139,6 +139,27 @@ def attention(params, x, cfg, *, positions, prefix: int = 0,
     return out, k, v
 
 
+def _decode_qkv(params, x, cfg, cache_k, cache_v, pos):
+    """Shared decode front half: project + rotate the new token and write
+    its k/v into each slot's cache (rolling slot pos % S_cache for SWA).
+    Returns (q (B, 1, H, hd) rotated, new cache_k, new cache_v, pos (B,))."""
+    b = x.shape[0]
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s_cache = cache_k.shape[1]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    q = (x @ params["wq"]).reshape(b, 1, h, hd)
+    k = (x @ params["wk"]).reshape(b, 1, hkv, hd)
+    v = (x @ params["wv"]).reshape(b, 1, hkv, hd)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+
+    slot = pos % s_cache  # rolling for SWA; identity while pos < s_cache
+    bidx = jnp.arange(b)
+    cache_k = cache_k.at[bidx, slot].set(k[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[bidx, slot].set(v[:, 0].astype(cache_v.dtype))
+    return q, cache_k, cache_v, pos
+
+
 def decode_attention(params, x, cfg, *, cache_k, cache_v, pos):
     """Single-token decode. x: (B, 1, d); cache_k/v: (B, S_cache, Hkv, hd)
     (rotated keys); pos: scalar or (B,) int32 — absolute position of each
@@ -152,17 +173,8 @@ def decode_attention(params, x, cfg, *, cache_k, cache_v, pos):
     h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     s_cache = cache_k.shape[1]
     w = cfg.sliding_window
-    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
-    q = (x @ params["wq"]).reshape(b, 1, h, hd)
-    k = (x @ params["wk"]).reshape(b, 1, hkv, hd)
-    v = (x @ params["wv"]).reshape(b, 1, hkv, hd)
-    q = apply_rope(q, pos[:, None], cfg.rope_theta)
-    k = apply_rope(k, pos[:, None], cfg.rope_theta)
-
-    slot = pos % s_cache  # rolling for SWA; identity while pos < s_cache
-    bidx = jnp.arange(b)
-    cache_k = cache_k.at[bidx, slot].set(k[:, 0].astype(cache_k.dtype))
-    cache_v = cache_v.at[bidx, slot].set(v[:, 0].astype(cache_v.dtype))
+    q, cache_k, cache_v, pos = _decode_qkv(params, x, cfg, cache_k, cache_v,
+                                           pos)
 
     slots = jnp.arange(s_cache)
     if w is not None:  # rolling buffer: recover absolute positions
@@ -180,6 +192,26 @@ def decode_attention(params, x, cfg, *, cache_k, cache_v, pos):
     p = jax.nn.softmax(scores, axis=-1)
     o = jnp.einsum("bkgqs,bskd->bqkgd", p, cache_v.astype(jnp.float32))
     out = o.reshape(b, 1, h * hd).astype(x.dtype) @ params["wo"]
+    return out, cache_k, cache_v
+
+
+def packed_decode_attention(params, x, cfg, *, cache_k, cache_v, pos,
+                            decode_tbl, decode_spec):
+    """Packed mixed-position decode: same projections/cache write as
+    decode_attention, but attention runs over the packed decode grid —
+    each live slot attends ONLY its own valid KV prefix
+    (sum_r ceil(kv_len_r / blk) tiles in one launch instead of the
+    lockstep einsum's B * S_cache pad-to-max work). decode_tbl is the
+    round's traced (4, R) member table, decode_spec its static half
+    (ops.DecodeRoundSpec). Slots without a live member get zero attention
+    output (their k/v cache write still happens, matching lockstep)."""
+    b, _, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q, cache_k, cache_v, _ = _decode_qkv(params, x, cfg, cache_k, cache_v,
+                                         pos)
+    ot = attn_ops.packed_decode_attention(q[:, 0], cache_k, cache_v,
+                                          decode_tbl, decode_spec)
+    out = ot.reshape(b, 1, h * hd).astype(x.dtype) @ params["wo"]
     return out, cache_k, cache_v
 
 

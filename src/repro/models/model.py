@@ -159,15 +159,24 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
     return T.init_cache(cfg, batch, max_len, dtype)
 
 
-def decode_step(params, cfg, cache, tokens, pos):
-    """One decode step. tokens: (B, 1) int32; pos: scalar int32 (absolute
-    position of the new token). Returns (logits (B, 1, Vp) f32, new_cache)."""
+def decode_step(params, cfg, cache, tokens, pos, decode_tbl=None,
+                decode_spec=None):
+    """One decode step. tokens: (B, 1) int32; pos: scalar or (B,) int32
+    (absolute position of each new token). Returns (logits (B, 1, Vp) f32,
+    new_cache).
+
+    decode_tbl + decode_spec switch attention layers to the packed
+    mixed-position decode (serve/decode.decode_step_packed): one launch
+    per round over each live slot's own valid KV prefix instead of the
+    lockstep full-cache einsum. Every layer shares the round's table (all
+    caches advance by the same token)."""
     x = jnp.take(params["embed"], tokens, axis=0)
 
     def step(x, scanned):
         layer_params, layer_cache = scanned
         x, new_cache = T.superlayer_decode(layer_params, x, cfg, layer_cache,
-                                           pos)
+                                           pos, decode_tbl=decode_tbl,
+                                           decode_spec=decode_spec)
         return x, new_cache
 
     x, new_cache = jax.lax.scan(step, x, (params["layers"], cache))

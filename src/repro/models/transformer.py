@@ -137,13 +137,24 @@ def superlayer_fwd(p, x, cfg, *, positions, prefix, attn_impl, block,
 # ---------------------------------------------------------------------------
 
 
-def layer_decode(p, x, cfg, kind: str, p_idx: int, cache, pos):
-    """x: (B, 1, d); cache: per-layer state dict. Returns (x, new_cache)."""
+def layer_decode(p, x, cfg, kind: str, p_idx: int, cache, pos,
+                 decode_tbl=None, decode_spec=None):
+    """x: (B, 1, d); cache: per-layer state dict. Returns (x, new_cache).
+
+    decode_tbl/decode_spec select the packed mixed-position decode path
+    for attention mixers (one launch over each slot's own valid KV prefix
+    — see layers.packed_decode_attention); recurrent mixers are untouched
+    (their single-token update is per-slot independent already)."""
     h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
     if kind == "attn":
-        out, ck, cv = L.decode_attention(p["mixer"], h, cfg,
-                                         cache_k=cache["k"],
-                                         cache_v=cache["v"], pos=pos)
+        if decode_spec is not None:
+            out, ck, cv = L.packed_decode_attention(
+                p["mixer"], h, cfg, cache_k=cache["k"], cache_v=cache["v"],
+                pos=pos, decode_tbl=decode_tbl, decode_spec=decode_spec)
+        else:
+            out, ck, cv = L.decode_attention(p["mixer"], h, cfg,
+                                             cache_k=cache["k"],
+                                             cache_v=cache["v"], pos=pos)
         new_cache = {"k": ck, "v": cv}
         x = x + out
     elif kind == "mamba":
@@ -167,11 +178,13 @@ def layer_decode(p, x, cfg, kind: str, p_idx: int, cache, pos):
     return x + out2, new_cache
 
 
-def superlayer_decode(p, x, cfg, cache, pos):
+def superlayer_decode(p, x, cfg, cache, pos, decode_tbl=None,
+                      decode_spec=None):
     new_cache = {}
     for i, kind in enumerate(cfg.layer_pattern):
         x, new_cache[f"l{i}"] = layer_decode(
-            p[f"l{i}"], x, cfg, kind, i, cache[f"l{i}"], pos)
+            p[f"l{i}"], x, cfg, kind, i, cache[f"l{i}"], pos,
+            decode_tbl=decode_tbl, decode_spec=decode_spec)
     return x, new_cache
 
 

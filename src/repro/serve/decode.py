@@ -12,6 +12,12 @@ runs block-diagonally over the PackedSchedule grid (core/packing.py) —
 sum_r tri(n_r) tiles instead of R separate launches or R * tri(n_max)
 padded ones. The engine splices the returned per-layer KV states into its
 slot caches (Engine._admit_batch).
+
+`decode_step_packed` is the decode-time analogue: a position-skewed batch
+advances one token per live slot in one packed launch per attention layer,
+each slot attending only its own valid KV prefix (core/packing's
+decode_round of RowSchedule members) — sum_r ceil(kv_len_r / blk) tiles
+instead of the lockstep einsum's pad-to-max B * S_cache.
 """
 
 from __future__ import annotations
@@ -84,6 +90,84 @@ def jit_generate(params, cfg, cache, first_tokens, start_pos, n_tokens,
                  key, temperature=0.0, top_k=None):
     return generate(params, cfg, cache, first_tokens, start_pos, n_tokens,
                     key=key, temperature=temperature, top_k=top_k)
+
+
+# ---------------------------------------------------------------------------
+# Packed mixed-position decode (one launch per decode round)
+# ---------------------------------------------------------------------------
+
+
+def round_capacity(needed: int, floor: int = 8) -> int:
+    """Bucket a round's live tile count to a static grid size (next power
+    of two, floored) so position skew does not recompile every round: at
+    most log2(B * S_cache / blk) distinct programs per engine."""
+    return max(floor, 1 << max(0, int(needed) - 1).bit_length())
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "spec"))
+def _packed_decode_forward(params, cfg, cache, tokens, pos, tbl, spec):
+    return MD.decode_step(params, cfg, cache, tokens, pos, decode_tbl=tbl,
+                          decode_spec=spec)
+
+
+def decode_step_packed(params, cfg, cache, tokens, pos, kv_lens, slots, *,
+                       block: int = 16, impl: str = "scan",
+                       n_members: int = 0, capacity: int = 0):
+    """One PACKED decode round: every live slot advances one token in ONE
+    launch per attention layer, each attending only its own valid KV
+    prefix — sum_r ceil(kv_len_r / blk) tiles instead of the lockstep
+    pad-to-max B * S_cache.
+
+    tokens: (B, 1) int32; pos: (B,) int32 (stale entries for retired slots
+    are fine — they are not in ``slots``). kv_lens/slots: host lists — live
+    slots' valid KV token counts (min(pos + 1, S_cache)) and batch rows.
+    n_members/capacity pin the table width / grid bucket (0 = derive:
+    B + 1 members, power-of-two capacity). Returns
+    (logits, new_cache, info) with info the round's tile accounting:
+    {"tiles": live tiles, "tiles_padded": n_live * max tiles,
+     "capacity": static grid size}.
+
+    Only attention layers change behavior; recurrent mixers decode their
+    own slot's state independently either way. Retired slots still run the
+    (idempotent) k/v cache rewrite and get zero attention output — the
+    engine discards their sampled tokens, so token streams are unaffected.
+    """
+    b = tokens.shape[0]
+    n_members = n_members or b + 1
+    # every attention layer shares one cache geometry (cfg-global S_cache)
+    s_cache = _attn_cache_len(cfg, cache)
+    blk = min(block, s_cache)
+    while s_cache % blk:
+        blk //= 2
+    tbl, needed = attn_ops.make_decode_table(
+        kv_lens, slots, blk=blk, n_members=n_members, n_slots=b,
+        s_cache=s_cache)
+    capacity = capacity or round_capacity(needed)
+    assert capacity >= needed, (capacity, needed)
+    spec = attn_ops.DecodeRoundSpec(n_members=n_members, capacity=capacity,
+                                    blk=blk, impl=impl)
+    logits, new_cache = _packed_decode_forward(
+        params, cfg, cache, tokens, jnp.asarray(pos, jnp.int32),
+        jnp.asarray(tbl), spec)
+    tiles_max = max(-(-int(l) // blk) for l in kv_lens)
+    info = {"tiles": needed, "tiles_padded": len(list(kv_lens)) * tiles_max,
+            "capacity": capacity, "blk": blk}
+    return logits, new_cache, info
+
+
+def _attn_cache_len(cfg, cache):
+    """S_cache shared by every attention layer's KV leaves — identified by
+    the (n_sl, B, S, Hkv, hd) shape signature so recurrent-state leaves of
+    the same rank can never be mistaken for KV; cfg.sliding_window caps
+    it. This is the single source of truth for the decode-round geometry
+    (the engine reads it too, so kv_len clamps cannot drift from the
+    actual cache sizing)."""
+    for leaf in jax.tree.leaves(cache):
+        if leaf.ndim == 5 and leaf.shape[3:] == (cfg.n_kv_heads,
+                                                 cfg.head_dim):
+            return leaf.shape[2]
+    raise ValueError("no attention KV leaves in cache (recurrent-only "
+                     "arch cannot take the packed decode path)")
 
 
 # ---------------------------------------------------------------------------

@@ -49,7 +49,8 @@ class Engine:
                  cache_dtype=jnp.float32, temperature: float = 0.0,
                  seed: int = 0, prefill_mode: str = "packed",
                  prefill_block: int = 16, prefill_impl: str = "scan",
-                 prefill_bucket: int = 0):
+                 prefill_bucket: int = 0, decode_mode: str = "auto",
+                 decode_block: int = 16, decode_impl: str = "scan"):
         self.params, self.cfg = params, cfg
         self.B, self.max_len = slots, max_len
         self.cache = MD.init_cache(cfg, slots, max_len, cache_dtype)
@@ -64,18 +65,44 @@ class Engine:
         # packed ragged prefill needs splice-able (attention) token mixers;
         # recurrent archs keep the sequential per-token path.
         assert prefill_mode in ("packed", "sequential")
-        self.prefill_mode = prefill_mode if all(
-            k == "attn" for k in cfg.layer_kinds) else "sequential"
+        attn_only = all(k == "attn" for k in cfg.layer_kinds)
+        self.prefill_mode = prefill_mode if attn_only else "sequential"
         self.prefill_block = prefill_block
         self.prefill_impl = prefill_impl
         # length-bucketing quantum for the packed forward's static shapes:
         # 0 = exact block padding (one compile per distinct length tuple);
         # set >0 under compile-bound traffic (see decode.packed_prefill).
         self.prefill_bucket = prefill_bucket
-        # observability: the acceptance claim is ONE packed launch per
-        # admit round regardless of how many slots were refilled.
+        # packed mixed-position decode: position-skewed rounds go through
+        # decode.decode_step_packed ("auto"); uniform all-live rounds keep
+        # the lockstep einsum (one fused op, no per-tile bookkeeping).
+        # Recurrent archs auto-fall back to lockstep like prefill does.
+        assert decode_mode in ("auto", "packed", "lockstep")
+        self.decode_mode = decode_mode if attn_only else "lockstep"
+        self.decode_impl = decode_impl
+        # attention KV geometry, read off the ACTUAL cache leaves (the
+        # same source decode_step_packed uses — kv_len clamps can never
+        # drift from the real buffer size); recurrent-only archs have no
+        # KV leaves and only ever take the lockstep path, so the window
+        # formula stands in for their (unused) stats bookkeeping. The
+        # decode tile edge must divide S_cache (same normalization as
+        # decode_step_packed, pre-applied so stats use the real edge).
+        self.s_cache = D._attn_cache_len(cfg, self.cache) if any(
+            k == "attn" for k in cfg.layer_kinds) else max(
+            1, max_len if cfg.sliding_window is None
+            else min(cfg.sliding_window, max_len))
+        blk = min(decode_block, self.s_cache)
+        while self.s_cache % blk:
+            blk //= 2
+        self.decode_block = blk
+        # observability: ONE packed launch per admit round (prefill) and
+        # per decode round; prefill vs decode launches counted apart, plus
+        # per-round tile accounting for the packed-vs-padded claim.
         self.stats = {"prefill_launches": 0, "prefill_requests": 0,
-                      "prefill_tokens": 0, "admit_rounds": 0}
+                      "prefill_tokens": 0, "admit_rounds": 0,
+                      "decode_rounds": 0, "decode_packed_launches": 0,
+                      "decode_lockstep_launches": 0,
+                      "decode_tiles_packed": 0, "decode_tiles_padded": 0}
         self._decode = jax.jit(
             lambda p, c, t, pos: MD.decode_step(p, cfg, c, t, pos))
 
@@ -170,12 +197,37 @@ class Engine:
 
     # -- decode loop ---------------------------------------------------------
     def step(self):
-        """One lockstep decode across all active slots."""
+        """One decode round across all live slots — packed (mixed-position,
+        each slot over its own valid KV prefix) when the batch is
+        position-skewed or has retired slots, lockstep otherwise."""
         active = np.array([r is not None for r in self.slot_req])
         if not active.any():
             return
-        logits, cache = self._decode(self.params, self.cache, self.last_tok,
-                                     self.pos)
+        live = [s for s in range(self.B) if active[s]]
+        pos_np = np.asarray(self.pos)
+        kv_lens = [int(min(pos_np[s] + 1, self.s_cache)) for s in live]
+        # round geometry (recorded every round, whichever path runs): what
+        # the packed grid covers vs what pad-to-max lockstep would.
+        tiles = [-(-kl // self.decode_block) for kl in kv_lens]
+        # skew at TILE granularity: equal tile counts with every slot live
+        # means the packed grid equals pad-to-max — lockstep's one fused
+        # einsum wins there, the packed grid wins everywhere else.
+        skewed = len(live) < self.B or len(set(tiles)) > 1
+        use_packed = self.decode_mode == "packed" or (
+            self.decode_mode == "auto" and skewed)
+        self.stats["decode_rounds"] += 1
+        self.stats["decode_tiles_packed"] += sum(tiles)
+        self.stats["decode_tiles_padded"] += len(live) * max(tiles)
+        if use_packed:
+            logits, cache, _ = D.decode_step_packed(
+                self.params, self.cfg, self.cache, self.last_tok, self.pos,
+                kv_lens, live, block=self.decode_block,
+                impl=self.decode_impl)
+            self.stats["decode_packed_launches"] += 1
+        else:
+            logits, cache = self._decode(self.params, self.cache,
+                                         self.last_tok, self.pos)
+            self.stats["decode_lockstep_launches"] += 1
         self.key, k = jax.random.split(self.key)
         nxt = D.sample_logits(k, logits[:, 0], temperature=self.temperature,
                               vocab_size=self.cfg.vocab_size)

@@ -1,0 +1,229 @@
+"""Shared differential-oracle module for every kernel/schedule family.
+
+One module owns (a) the NUMPY float64 reference implementations the kernel
+tests diff against — deliberately independent of the jnp refs that ship
+inside each kernel package (``repro.kernels.*.ref``), so a bug in the
+shared repro code cannot agree with itself — and (b) the tolerance policy,
+so "how close is close enough" is decided once per (domain, dtype) pair
+instead of re-invented per test file.
+
+Imported by test_kernels_tri_attn.py, test_kernels_tri_edm.py,
+test_kernels_tri_3body.py, test_packing.py, and test_decode_packed.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mapping as M
+
+NEG_INF = float(np.finfo(np.float32).min)
+
+# ---------------------------------------------------------------------------
+# Tolerance policy: one (domain, dtype) table. Notes:
+#   attn      — flash-style online softmax vs full softmax reassociation.
+#   attn_bitwise_pair — two impls sharing schedule AND op order (scan vs
+#               pallas interpret): f32 roundoff only.
+#   attn_grad — custom-VJP kernels vs autodiff through the oracle.
+#   edm       — sqrt amplifies f32 roundoff of d^2 ~ 0 on diagonal blocks
+#               (a+b-2ab vs the oracle's direct |x_i-x_j|^2 reduction).
+#   3body     — triple-product reductions over Gram tiles.
+# ---------------------------------------------------------------------------
+
+_TOLS = {
+    ("attn", "float32"): dict(atol=2e-5, rtol=2e-5),
+    ("attn", "bfloat16"): dict(atol=2e-2, rtol=2e-2),
+    ("attn_bitwise_pair", "float32"): dict(atol=1e-6, rtol=1e-6),
+    ("attn_grad", "float32"): dict(atol=2e-4, rtol=2e-3),
+    ("edm", "float32"): dict(atol=2e-3, rtol=1e-4),
+    ("edm", "bfloat16"): dict(atol=5e-2, rtol=5e-2),
+    ("edm_sq", "float32"): dict(atol=1e-5, rtol=1e-5),
+    ("3body", "float32"): dict(atol=2e-4, rtol=2e-5),
+    ("3body_total", "float32"): dict(atol=0.0, rtol=1e-5),
+}
+
+
+def _dtype_name(dtype) -> str:
+    try:
+        return jnp.dtype(dtype).name
+    except TypeError:
+        return str(dtype)
+
+
+def tol(kind: str, dtype=jnp.float32) -> dict:
+    """Tolerance kwargs for np.testing.assert_allclose."""
+    return dict(_TOLS[(kind, _dtype_name(dtype))])
+
+
+def assert_close(got, want, kind: str, dtype=jnp.float32, err_msg=""):
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        err_msg=err_msg, **tol(kind, dtype))
+
+
+# ---------------------------------------------------------------------------
+# Shared random inputs (jax.random so values match the kernels' precision
+# expectations; generation is not the system under test)
+# ---------------------------------------------------------------------------
+
+
+def rand_qkv(seed: int, b: int, h: int, hkv: int, s: int, d: int,
+             dtype=jnp.float32):
+    """(q (B,H,S,D), k, v (B,Hkv,S,D)) from one seed."""
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(kq, (b, h, s, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(kk, (b, hkv, s, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(kv, (b, hkv, s, d), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+def rand_points(seed: int, n_rows: int, d: int, dtype=jnp.float32):
+    """(N, d) feature points for the EDM / 3-body workloads."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n_rows, d), jnp.float32)
+    return x.astype(dtype)
+
+
+def rand_decode_state(seed: int, b: int, h: int, hkv: int, s_cache: int,
+                      d: int, dtype=jnp.float32):
+    """(q (B,H,D), k_cache, v_cache (B,S,Hkv,D)) — one decode round."""
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(kq, (b, h, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(kk, (b, s_cache, hkv, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(kv, (b, s_cache, hkv, d), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Attention oracles (numpy, float64 accumulation)
+# ---------------------------------------------------------------------------
+
+
+def attention_mask_np(s_q: int, s_k: int, *, window=None, prefix: int = 0,
+                      q_offset: int = 0) -> np.ndarray:
+    """Boolean (s_q, s_k); True = attend. causal + optional SWA + prefix."""
+    qp = np.arange(s_q)[:, None] + q_offset
+    kp = np.arange(s_k)[None, :]
+    m = kp <= qp
+    if window is not None:
+        m &= (qp - kp) < window
+    if prefix:
+        m |= kp < prefix
+    return m
+
+
+def attention_oracle(q, k, v, *, sm_scale=None, window=None, prefix: int = 0,
+                     q_offset: int = 0) -> np.ndarray:
+    """Full-softmax MHA in numpy float64.
+
+    q: (B, H, Sq, D); k, v: (B, Hkv, Sk, D), H % Hkv == 0. -> (B, H, Sq, D)
+    float32."""
+    q = np.asarray(q, np.float64)
+    k = np.asarray(k, np.float64)
+    v = np.asarray(v, np.float64)
+    b, h, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    g = h // hkv
+    if g > 1:
+        k = np.repeat(k, g, axis=1)
+        v = np.repeat(v, g, axis=1)
+    scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+    s = np.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    mask = attention_mask_np(sq, sk, window=window, prefix=prefix,
+                             q_offset=q_offset)
+    s = np.where(mask[None, None], s, -np.inf)
+    m = s.max(axis=-1, keepdims=True)
+    p = np.exp(s - m)
+    out = np.einsum("bhqk,bhkd->bhqd", p, v) / p.sum(axis=-1, keepdims=True)
+    return out.astype(np.float32)
+
+
+def decode_round_oracle(q, k_cache, v_cache, kv_lens) -> np.ndarray:
+    """Oracle for one packed mixed-position decode round.
+
+    q: (B, H, D) single rotated queries; k_cache, v_cache: (B, S, Hkv, D)
+    native cache layout; kv_lens: (B,) ints — slot b attends cache rows
+    [0, kv_lens[b]) (its valid prefix; 0 = retired slot -> zero output).
+    Each slot is reduced in ISOLATION (the sequential per-slot reference
+    the packed launch must match). Returns (B, H, D) float32."""
+    q = np.asarray(q, np.float64)
+    b, h, d = q.shape
+    out = np.zeros((b, h, d), np.float32)
+    for bi in range(b):
+        kl = int(kv_lens[bi])
+        if kl == 0:
+            continue
+        kc = np.asarray(k_cache[bi, :kl], np.float64)  # (kl, Hkv, D)
+        vc = np.asarray(v_cache[bi, :kl], np.float64)
+        o = attention_oracle(q[bi][None, :, None, :],
+                             kc.transpose(1, 0, 2)[None],
+                             vc.transpose(1, 0, 2)[None],
+                             q_offset=kl - 1)
+        out[bi] = o[0, :, 0, :]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# EDM oracle (numpy, float64)
+# ---------------------------------------------------------------------------
+
+
+def edm_full_oracle(x, *, squared: bool = False) -> np.ndarray:
+    """(N, d) -> (N, N) pairwise Euclidean distances, direct |x_i - x_j|
+    reduction (no a+b-2ab trick — deliberately a different algorithm than
+    the kernels)."""
+    x = np.asarray(x, np.float64)
+    d2 = ((x[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+    return (d2 if squared else np.sqrt(d2)).astype(np.float32)
+
+
+def edm_packed_oracle(x, block: int, *, squared: bool = False) -> np.ndarray:
+    """(N, d) -> (T, block, block) block-packed lower triangle, tile
+    lambda = g^-1(i, j) row-major (the paper's packed layout)."""
+    full = edm_full_oracle(x, squared=squared)
+    n = full.shape[0] // block
+    out = np.empty((M.tri(n), block, block), np.float32)
+    for lam in range(M.tri(n)):
+        i, j = M.ltm_map(lam)
+        out[lam] = full[i * block:(i + 1) * block,
+                        j * block:(j + 1) * block]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# 3-body oracle (numpy, float64)
+# ---------------------------------------------------------------------------
+
+
+def three_body_packed_oracle(x, block: int,
+                             strict: bool = False) -> np.ndarray:
+    """(N, d) -> (T3, 1) per-unique-tile-triple reductions of
+    G[a,b] G[b,c] G[a,c] over the tet domain; strict keeps only a > b > c
+    point triples (mirrors the kernels' diagonal-tile masking)."""
+    x = np.asarray(x, np.float64)
+    g = x @ x.T
+    n = x.shape[0] // block
+    idx = np.arange(x.shape[0])
+    out = np.empty((M.tet(n), 1), np.float32)
+    for lam in range(M.tet(n)):
+        i, j, k = M.tet_map(lam)
+        si, sj, sk = (slice(t * block, (t + 1) * block) for t in (i, j, k))
+        a, b, c = g[si, sj], g[sj, sk], g[si, sk]
+        if strict:
+            a = np.where(idx[si][:, None] > idx[sj][None, :], a, 0.0)
+            b = np.where(idx[sj][:, None] > idx[sk][None, :], b, 0.0)
+        out[lam, 0] = np.sum((a @ b) * c)
+    return out
+
+
+def three_body_total_oracle(x, strict: bool = False) -> float:
+    """Dense float64 total: all ordered triples (loose) or each distinct
+    unordered triple a > b > c once (strict)."""
+    x = np.asarray(x, np.float64)
+    g = x @ x.T
+    if not strict:
+        return float(np.einsum("ab,bc,ac->", g, g, g))
+    lower = np.tril(np.ones_like(g), -1)
+    a = g * lower
+    return float(np.sum((a @ a) * g))

@@ -1,4 +1,4 @@
-"""3-body kernel validation vs the numpy oracle.
+"""3-body kernel validation vs the shared numpy oracle (tests/oracles.py).
 
 The 3D analogue of the tri_edm tests: every impl (tet-grid Pallas, scan,
 BB-3D baseline) must produce the same per-tile-triple reductions, and the
@@ -7,11 +7,10 @@ over ALL ordered point triples — the proof that launching tet(n) tiles
 instead of n^3 loses nothing.
 """
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import oracles as O
 from repro.core import mapping as M
 from repro.kernels.tri_3body import ops as OPS
 from repro.kernels.tri_3body import ref as REF
@@ -20,28 +19,27 @@ from repro.kernels.tri_3body import ref as REF
 @pytest.mark.parametrize("impl", ["pallas", "scan"])
 @pytest.mark.parametrize("d", [1, 3, 8])
 @pytest.mark.parametrize("n_rows,block", [(16, 8), (32, 8), (48, 16)])
-def test_three_body_packed_matches_ref(impl, d, n_rows, block):
-    x = jax.random.normal(jax.random.PRNGKey(d), (n_rows, d), jnp.float32)
+def test_three_body_packed_matches_oracle(impl, d, n_rows, block):
+    x = O.rand_points(d, n_rows, d)
     got = OPS.three_body(x, block, impl=impl)
-    want = REF.three_body_packed_ref(x, block)
+    want = O.three_body_packed_oracle(x, block)
     assert got.shape == (M.tet(n_rows // block), 1)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=2e-5, atol=2e-4)
+    O.assert_close(got, want, "3body")
 
 
 def test_three_body_bb3_matches_packed():
     """BB-3D baseline writes the simplex entries of the full cube and
     zeros elsewhere; same values as the packed launch."""
-    x = jax.random.normal(jax.random.PRNGKey(1), (32, 4), jnp.float32)
+    x = O.rand_points(1, 32, 4)
     block = 8
     n = 32 // block
     cube = np.asarray(OPS.three_body(x, block, impl="bb3"))
-    want = np.asarray(REF.three_body_packed_ref(x, block))
+    want = O.three_body_packed_oracle(x, block)
     assert cube.shape == (n, n, n)
     for lam in range(M.tet(n)):
         i, j, k = M.tet_map(lam)
-        np.testing.assert_allclose(cube[i, j, k], want[lam, 0],
-                                   rtol=2e-5, atol=2e-4)
+        O.assert_close(cube[i, j, k], want[lam, 0], "3body",
+                       err_msg=str((i, j, k)))
     dead = [(i, j, k) for i in range(n) for j in range(n) for k in range(n)
             if not (k <= j <= i)]
     for i, j, k in dead:
@@ -49,16 +47,16 @@ def test_three_body_bb3_matches_packed():
 
 
 def test_bb3_scan_matches_packed():
-    x = jax.random.normal(jax.random.PRNGKey(2), (24, 2), jnp.float32)
+    x = O.rand_points(2, 24, 2)
     block = 8
     n = 24 // block
     flat = np.asarray(OPS.three_body(x, block, impl="bb3_scan"))
-    want = np.asarray(REF.three_body_packed_ref(x, block))
+    want = O.three_body_packed_oracle(x, block)
     assert flat.shape == (n ** 3, 1)
     for lam in range(M.tet(n)):
         i, j, k = M.tet_map(lam)
-        np.testing.assert_allclose(flat[(i * n + j) * n + k, 0],
-                                   want[lam, 0], rtol=2e-5, atol=2e-4)
+        O.assert_close(flat[(i * n + j) * n + k, 0], want[lam, 0], "3body",
+                       err_msg=str((i, j, k)))
 
 
 @pytest.mark.parametrize("impl", ["pallas", "scan", "ref", "bb3",
@@ -66,10 +64,21 @@ def test_bb3_scan_matches_packed():
 def test_three_body_total_matches_dense_einsum(impl):
     """tet(n) unique tiles + multiset weights == all n_rows^3 ordered
     triples: the 3D unique-pair exactness claim."""
-    x = jax.random.normal(jax.random.PRNGKey(3), (24, 3), jnp.float32)
+    x = O.rand_points(3, 24, 3)
     tot = float(OPS.three_body_total(x, 8, impl=impl))
-    want = float(REF.three_body_total_ref(x))
-    np.testing.assert_allclose(tot, want, rtol=1e-5)
+    O.assert_close(tot, O.three_body_total_oracle(x), "3body_total")
+
+
+def test_jnp_ref_matches_oracle():
+    """In-package jnp ref vs the independent float64 oracle, loose and
+    strict."""
+    x = O.rand_points(21, 24, 3)
+    O.assert_close(REF.three_body_packed_ref(x, 8),
+                   O.three_body_packed_oracle(x, 8), "3body")
+    O.assert_close(REF.three_body_packed_ref(x, 8, strict=True),
+                   O.three_body_packed_oracle(x, 8, strict=True), "3body")
+    O.assert_close(float(REF.three_body_total_strict_ref(x)),
+                   O.three_body_total_oracle(x, strict=True), "3body_total")
 
 
 def test_tile_mult_partitions_cube():
@@ -105,18 +114,17 @@ def test_packed_memory_vs_cube():
 
 
 @pytest.mark.parametrize("impl", ["pallas", "scan", "ref"])
-def test_strict_packed_matches_strict_ref(impl):
-    x = jax.random.normal(jax.random.PRNGKey(11), (24, 3), jnp.float32)
+def test_strict_packed_matches_strict_oracle(impl):
+    x = O.rand_points(11, 24, 3)
     got = OPS.three_body(x, 8, impl=impl, strict=True)
-    want = REF.three_body_packed_ref(x, 8, strict=True)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=2e-5, atol=2e-4)
+    O.assert_close(got, O.three_body_packed_oracle(x, 8, strict=True),
+                   "3body")
 
 
 def test_strict_changes_only_diagonal_tiles():
     """Strictness is an IN-KERNEL diagonal-tile mask: off-diagonal tile
     triples (i > j > k) are bitwise untouched."""
-    x = jax.random.normal(jax.random.PRNGKey(12), (32, 4), jnp.float32)
+    x = O.rand_points(12, 32, 4)
     loose = np.asarray(OPS.three_body(x, 8, impl="scan"))
     strict = np.asarray(OPS.three_body(x, 8, impl="scan", strict=True))
     n = 4
@@ -135,18 +143,18 @@ def test_strict_total_matches_distinct_triple_oracle(impl):
     """strict total == sum over a > b > c of the dense oracle — each
     unordered triple of distinct points exactly once, with NO post-hoc
     multiplicity correction."""
-    x = jax.random.normal(jax.random.PRNGKey(13), (24, 3), jnp.float32)
+    x = O.rand_points(13, 24, 3)
     tot = float(OPS.three_body_total(x, 8, impl=impl, strict=True))
-    want = float(REF.three_body_total_strict_ref(x))
-    np.testing.assert_allclose(tot, want, rtol=1e-5)
+    O.assert_close(tot, O.three_body_total_oracle(x, strict=True),
+                   "3body_total")
 
 
 def test_strict_singleton_tile_is_zero():
     """One tile (i == j == k == 0) with block == n_rows: the only
     surviving triples are a > b > c inside the tile."""
-    x = jax.random.normal(jax.random.PRNGKey(14), (8, 2), jnp.float32)
+    x = O.rand_points(14, 8, 2)
     got = float(OPS.three_body(x, 8, impl="scan", strict=True)[0, 0])
-    g = np.asarray(REF.gram(x))
+    g = np.asarray(REF.gram(x), np.float64)
     want = sum(g[a, b] * g[b, c] * g[a, c]
                for a in range(8) for b in range(a) for c in range(b))
     np.testing.assert_allclose(got, want, rtol=1e-5)

@@ -1,7 +1,10 @@
-"""Kernel validation: Pallas (interpret) + scan impl vs the jnp oracle.
+"""Kernel validation: Pallas (interpret) + scan impl vs the shared oracle.
 
 Sweeps shapes, dtypes, GQA group sizes, and schedule kinds; checks both
-forward values and gradients.
+forward values and gradients. Reference values and tolerances come from
+tests/oracles.py (the shared differential-oracle module); the in-package
+jnp ref (ref.py) is only used where a DIFFERENTIABLE reference is needed
+(gradient checks).
 """
 
 import functools
@@ -11,22 +14,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import oracles as O
 from repro.kernels.tri_attn import ops as OPS
 from repro.kernels.tri_attn import ref as REF
-
-
-def _rand_qkv(key, b, h, hkv, s, d, dtype):
-    kq, kk, kv = jax.random.split(key, 3)
-    q = jax.random.normal(kq, (b, h, s, d), jnp.float32).astype(dtype)
-    k = jax.random.normal(kk, (b, hkv, s, d), jnp.float32).astype(dtype)
-    v = jax.random.normal(kv, (b, hkv, s, d), jnp.float32).astype(dtype)
-    return q, k, v
-
-
-def _tol(dtype):
-    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(
-        atol=2e-5, rtol=2e-5)
-
 
 CASES = [
     # (b, h, hkv, s, d, block, window, prefix)
@@ -43,21 +33,31 @@ CASES = [
 @pytest.mark.parametrize("impl", ["scan", "pallas"])
 @pytest.mark.parametrize("case", CASES, ids=[str(c) for c in CASES])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_fwd_matches_ref(impl, case, dtype):
+def test_fwd_matches_oracle(impl, case, dtype):
     b, h, hkv, s, d, blk, window, prefix = case
-    q, k, v = _rand_qkv(jax.random.PRNGKey(0), b, h, hkv, s, d, dtype)
+    q, k, v = O.rand_qkv(0, b, h, hkv, s, d, dtype)
     got = OPS.triangular_attention(q, k, v, window=window, prefix=prefix,
                                    impl=impl, block_q=blk, block_k=blk)
-    want = REF.mha_reference(q, k, v, window=window, prefix=prefix)
-    np.testing.assert_allclose(np.asarray(got, np.float32),
-                               np.asarray(want, np.float32), **_tol(dtype))
+    want = O.attention_oracle(q, k, v, window=window, prefix=prefix)
+    O.assert_close(got, want, "attn", dtype)
+
+
+def test_jnp_ref_matches_oracle():
+    """The in-package jnp ref (used by the grad checks and model layers)
+    must itself agree with the independent numpy oracle."""
+    for case in CASES:
+        b, h, hkv, s, d, _, window, prefix = case
+        q, k, v = O.rand_qkv(5, b, h, hkv, s, d, jnp.float32)
+        got = REF.mha_reference(q, k, v, window=window, prefix=prefix)
+        want = O.attention_oracle(q, k, v, window=window, prefix=prefix)
+        O.assert_close(got, want, "attn", err_msg=str(case))
 
 
 @pytest.mark.parametrize("impl", ["scan", "pallas"])
 @pytest.mark.parametrize("case", CASES[:5], ids=[str(c) for c in CASES[:5]])
 def test_grads_match_ref(impl, case):
     b, h, hkv, s, d, blk, window, prefix = case
-    q, k, v = _rand_qkv(jax.random.PRNGKey(1), b, h, hkv, s, d, jnp.float32)
+    q, k, v = O.rand_qkv(1, b, h, hkv, s, d, jnp.float32)
 
     def loss(fn):
         def inner(q, k, v):
@@ -73,36 +73,43 @@ def test_grads_match_ref(impl, case):
     g_got = jax.grad(loss(attn), argnums=(0, 1, 2))(q, k, v)
     g_want = jax.grad(loss(ref), argnums=(0, 1, 2))(q, k, v)
     for got, want, name in zip(g_got, g_want, "qkv"):
-        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                                   atol=2e-4, rtol=2e-3, err_msg=f"d{name}")
+        O.assert_close(got, want, "attn_grad", err_msg=f"d{name}")
 
 
-def test_bb_baseline_matches_ref():
+def test_bb_baseline_matches_oracle():
     """The paper's BB strategy must produce identical output (it only wastes
     blocks; § IV 'We checked the output for each strategy to be always
     correct and the same')."""
-    q, k, v = _rand_qkv(jax.random.PRNGKey(2), 1, 2, 2, 64, 16, jnp.float32)
+    q, k, v = O.rand_qkv(2, 1, 2, 2, 64, 16, jnp.float32)
     got = OPS.triangular_attention(q, k, v, impl="bb", block_q=16, block_k=16)
-    want = REF.mha_reference(q, k, v)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5,
-                               rtol=2e-5)
+    O.assert_close(got, O.attention_oracle(q, k, v), "attn")
 
 
 def test_scan_equals_pallas_bitwise_family():
     """scan and pallas share schedules + math; outputs should agree to f32
     roundoff on identical inputs."""
-    q, k, v = _rand_qkv(jax.random.PRNGKey(3), 2, 4, 2, 64, 16, jnp.float32)
+    q, k, v = O.rand_qkv(3, 2, 4, 2, 64, 16, jnp.float32)
     a = OPS.triangular_attention(q, k, v, impl="scan", block_q=16, block_k=16)
     b = OPS.triangular_attention(q, k, v, impl="pallas", block_q=16,
                                  block_k=16)
-    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6,
-                               rtol=1e-6)
+    O.assert_close(a, b, "attn_bitwise_pair")
 
 
 def test_single_block_degenerate():
-    q, k, v = _rand_qkv(jax.random.PRNGKey(4), 1, 1, 1, 16, 8, jnp.float32)
+    q, k, v = O.rand_qkv(4, 1, 1, 1, 16, 8, jnp.float32)
     got = OPS.triangular_attention(q, k, v, impl="scan", block_q=16,
                                    block_k=16)
-    want = REF.mha_reference(q, k, v)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5,
-                               rtol=2e-5)
+    O.assert_close(got, O.attention_oracle(q, k, v), "attn")
+
+
+def test_oracle_mask_matches_ref_mask():
+    """The shared numpy mask and the in-package jnp mask are the same
+    function (differential check of the oracles themselves)."""
+    for window, prefix, q_off in ((None, 0, 0), (7, 0, 0), (None, 5, 0),
+                                  (None, 0, 12), (9, 3, 4)):
+        got = O.attention_mask_np(8, 20, window=window, prefix=prefix,
+                                  q_offset=q_off)
+        want = np.asarray(REF.attention_mask(8, 20, window=window,
+                                             prefix=prefix, q_offset=q_off))
+        np.testing.assert_array_equal(got, want, err_msg=str((window, prefix,
+                                                              q_off)))

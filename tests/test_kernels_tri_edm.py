@@ -1,14 +1,17 @@
-"""EDM kernel validation vs the jnp oracle, sweeping shapes/dtypes/features.
+"""EDM kernel validation vs the shared numpy oracle (tests/oracles.py),
+sweeping shapes/dtypes/features.
 
 Mirrors the paper's experiment grid (features d in 1..4, plus larger d) at
-CPU-test scale.
+CPU-test scale. The in-package jnp ref (ref.py) keeps its pack/unpack
+round-trip coverage; distance values diff against the independent float64
+oracle.
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import oracles as O
 from repro.core import mapping as M
 from repro.kernels.tri_edm import ops as OPS
 from repro.kernels.tri_edm import ref as REF
@@ -17,57 +20,57 @@ from repro.kernels.tri_edm import ref as REF
 @pytest.mark.parametrize("impl", ["pallas", "scan"])
 @pytest.mark.parametrize("d", [1, 2, 3, 4, 16])  # paper uses 1..4 features
 @pytest.mark.parametrize("n_rows,block", [(32, 8), (64, 16), (96, 32)])
-def test_edm_packed_matches_ref(impl, d, n_rows, block):
-    x = jax.random.normal(jax.random.PRNGKey(d), (n_rows, d), jnp.float32)
+def test_edm_packed_matches_oracle(impl, d, n_rows, block):
+    x = O.rand_points(d, n_rows, d)
     got = OPS.edm(x, block, impl=impl)
-    want = REF.edm_packed_ref(x, block)
+    want = O.edm_packed_oracle(x, block)
     assert got.shape == (M.tri(n_rows // block), block, block)
-    # atol 2e-3: sqrt amplifies f32 roundoff of d^2 ~ 0 on diagonal blocks
-    # (|x_i - x_j|^2 via a+b-2ab differs from ref's reduction order).
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-3,
-                               rtol=1e-4)
+    # 'edm' tolerance: sqrt amplifies f32 roundoff of d^2 ~ 0 on diagonal
+    # blocks (|x_i - x_j|^2 via a+b-2ab differs from the direct reduction).
+    O.assert_close(got, want, "edm")
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_edm_dtypes(dtype):
-    x = jax.random.normal(jax.random.PRNGKey(0), (32, 4), jnp.float32)
-    x = x.astype(dtype)
+    x = O.rand_points(0, 32, 4).astype(dtype)
     got = OPS.edm(x, 8, impl="pallas")
-    want = REF.edm_packed_ref(x, 8)
-    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=tol,
-                               rtol=tol)
+    want = O.edm_packed_oracle(x, 8)
+    O.assert_close(got, want, "edm", dtype)
 
 
 def test_edm_bb_matches_full_lower():
     """BB baseline writes the lower triangle of the full matrix; §IV: every
     strategy must produce the same (correct) output."""
-    x = jax.random.normal(jax.random.PRNGKey(1), (64, 3), jnp.float32)
-    got = OPS.edm(x, 16, impl="bb")
-    want = np.asarray(REF.edm_full(x))
-    got = np.asarray(got)
+    x = O.rand_points(1, 64, 3)
+    got = np.asarray(OPS.edm(x, 16, impl="bb"))
+    want = O.edm_full_oracle(x)
     n = 64 // 16
     for i in range(n):
         for j in range(n):
             blk = got[i * 16:(i + 1) * 16, j * 16:(j + 1) * 16]
             if j <= i:
-                np.testing.assert_allclose(
-                    blk, want[i * 16:(i + 1) * 16, j * 16:(j + 1) * 16],
-                    atol=2e-3, rtol=1e-4)
+                O.assert_close(blk,
+                               want[i * 16:(i + 1) * 16, j * 16:(j + 1) * 16],
+                               "edm", err_msg=f"block {(i, j)}")
             else:
                 np.testing.assert_array_equal(blk, 0.0)
 
 
 def test_edm_squared():
-    x = jax.random.normal(jax.random.PRNGKey(2), (32, 4), jnp.float32)
+    x = O.rand_points(2, 32, 4)
     got = OPS.edm(x, 8, impl="scan", squared=True)
-    want = REF.edm_packed_ref(x, 8, squared=True)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5,
-                               rtol=1e-5)
+    O.assert_close(got, O.edm_packed_oracle(x, 8, squared=True), "edm_sq")
+
+
+def test_jnp_ref_matches_oracle():
+    """In-package jnp ref (used by benches) vs the independent oracle."""
+    x = O.rand_points(9, 48, 3)
+    O.assert_close(REF.edm_packed_ref(x, 16), O.edm_packed_oracle(x, 16),
+                   "edm")
 
 
 def test_pack_unpack_roundtrip():
-    x = jax.random.normal(jax.random.PRNGKey(3), (48, 2), jnp.float32)
+    x = O.rand_points(3, 48, 2)
     full = REF.edm_full(x)
     packed = REF.pack_tri(full, 16)
     back = REF.unpack_tri(packed, 48, symmetric=True)

@@ -15,6 +15,7 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+import oracles as O
 from repro.core import schedule as S
 from repro.core.packing import PackedSchedule, padded_bb_blocks
 from repro.kernels.tri_attn import ops as OPS
@@ -23,7 +24,8 @@ from repro.kernels.tri_attn import ops as OPS
 def _mixed_members():
     return (S.TriangularSchedule(n=3), S.BandSchedule(n=5, w=2),
             S.PrefixSchedule(n=4, p=2), S.TriangularSchedule(n=1),
-            S.PrefixSchedule(n=3, p=0), S.BandSchedule(n=4, w=9))
+            S.RowSchedule(n=2), S.PrefixSchedule(n=3, p=0),
+            S.BandSchedule(n=4, w=9), S.RowSchedule(n=1))
 
 
 def _member_from(kind: int, n: int, param: int):
@@ -31,7 +33,9 @@ def _member_from(kind: int, n: int, param: int):
         return S.TriangularSchedule(n=n)
     if kind == 1:
         return S.BandSchedule(n=n, w=max(1, param))
-    return S.PrefixSchedule(n=n, p=param % (n + 1))
+    if kind == 2:
+        return S.PrefixSchedule(n=n, p=param % (n + 1))
+    return S.RowSchedule(n=n)  # the decode-round member
 
 
 # ---------------------------------------------------------------------------
@@ -87,7 +91,7 @@ def test_packed_rows_traced_matches_host():
         assert (int(qr[lam]), int(kr[lam])) == (base + i, base + j)
 
 
-@given(st.lists(st.integers(min_value=0, max_value=2), min_size=1,
+@given(st.lists(st.integers(min_value=0, max_value=3), min_size=1,
                 max_size=6),
        st.data())
 @settings(max_examples=25)
@@ -118,7 +122,9 @@ def test_seg_counts_equal_sum_of_member_rows():
     lams = jnp.arange(pk.num_blocks, dtype=jnp.int32)
     starts = jax.jit(jax.vmap(pk.seg_start))(lams)
     ends = jax.jit(jax.vmap(pk.seg_end))(lams)
-    rows = sum(m.n for m in pk.members)
+    # one segment per distinct (request, row) — RowSchedule members are a
+    # single n-tile row, so this is NOT sum(m.n)
+    rows = len({(r, i) for r, i, _ in pk.enumerate_host()})
     assert int(jnp.sum(starts)) == rows
     assert int(jnp.sum(ends)) == rows
 
@@ -177,11 +183,7 @@ def test_padded_bb_baseline_counts():
 
 
 def _qkv(lens, h=4, hkv=2, d=8, seed=0):
-    s = sum(lens)
-    kq, kk, kv = jax.random.split(jax.random.PRNGKey(seed), 3)
-    return (jax.random.normal(kq, (1, h, s, d), jnp.float32),
-            jax.random.normal(kk, (1, hkv, s, d), jnp.float32),
-            jax.random.normal(kv, (1, hkv, s, d), jnp.float32))
+    return O.rand_qkv(seed, 1, h, hkv, sum(lens), d)
 
 
 @pytest.mark.parametrize("window,prefix", [(None, 0), (10, 0),
@@ -215,10 +217,8 @@ def test_packed_pallas_matches_scan_and_ref():
     sc = OPS.packed_prefill_attention(q, k, v, ps, impl="scan")
     pal = OPS.packed_prefill_attention(q, k, v, ps, impl="pallas")
     ref = OPS.packed_prefill_attention(q, k, v, ps, impl="ref")
-    np.testing.assert_allclose(np.asarray(pal), np.asarray(sc),
-                               rtol=2e-5, atol=2e-5)
-    np.testing.assert_allclose(np.asarray(sc), np.asarray(ref),
-                               rtol=2e-5, atol=2e-5)
+    O.assert_close(pal, sc, "attn")
+    O.assert_close(sc, ref, "attn")
 
 
 def test_make_packed_sched_rejects_short_param_lists():

@@ -1,0 +1,297 @@
+"""Exhaustive small-n round-trip fuzz for EVERY registered schedule.
+
+One sweep owns the structural claim all kernel families lean on: for each
+``make_schedule`` kind and every n in 1..64 (every valid n for REC), the
+launch enumeration covers each ACTIVE domain cell exactly once, and where
+an inverse exists, map -> inverse is the identity. The traced maps (the
+same scalar closed forms the Pallas index_maps run) are evaluated
+vectorized, with each kind's whole n-sweep fused into ONE jit call — one
+XLA compile per kind instead of ~10 eager op-compiles per (op, n) shape —
+and cross-checked against the eager host maps on a Fibonacci subset of n.
+
+Includes ``packed`` with nested mixed members (ltm/band/prefix/row — the
+decode-round member among them), so the shared grid machinery is fuzzed
+through the same sweep as the per-domain schedules.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mapping as M
+from repro.core import schedule as S
+from repro.core.packing import PackedSchedule, _member_inverse
+
+N_MAX = 64
+HOST_NS = (1, 2, 3, 5, 8, 13, 21, 34, 55, 64)  # eager-vs-traced subset
+
+
+def jit_sweep(builders):
+    """Evaluate every builder's traced outputs in ONE jit call."""
+    return jax.jit(lambda: [b() for b in builders])()
+
+
+def canon(cols) -> np.ndarray:
+    """Stack coordinate vectors into lexsorted (N, rank) rows."""
+    a = np.stack([np.asarray(c, np.int64).ravel() for c in cols], axis=1)
+    return a[np.lexsort(a.T[::-1])] if len(a) else a
+
+
+def check_cover(coords, expect: np.ndarray, ctx=""):
+    """coords enumerate exactly the expected cells, each exactly once."""
+    got = canon(coords)
+    if len(got) > 1:  # exactly-once: lexsorted rows are all distinct
+        assert (np.diff(got, axis=0) != 0).any(axis=1).all(), ctx
+    np.testing.assert_array_equal(got, expect, err_msg=ctx)
+
+
+def check_host(sched, coords, active_host=None):
+    """Eager host_map == the traced enumeration, every lambda."""
+    traced = [np.asarray(c) for c in coords]
+    for lam in range(sched.num_blocks):
+        if active_host is not None and not active_host(lam):
+            continue
+        assert tuple(int(c[lam]) for c in traced) == tuple(
+            sched.host_map(lam)), (sched, lam)
+
+
+def tril_cells(n):
+    return canon(np.tril_indices(n))
+
+
+def band_cells(n, w):
+    i, j = np.tril_indices(n)
+    keep = (i - j) < w
+    return canon((i[keep], j[keep]))
+
+
+def prefix_cells(n, p):
+    i, j = [a.ravel() for a in np.indices((n, n))]
+    keep = (j <= i) | (j < p)
+    return canon((i[keep], j[keep]))
+
+
+def simplex_cells(n):
+    i, j, k = [a.ravel() for a in np.indices((n, n, n))]
+    keep = (k <= j) & (j <= i)
+    return canon((i[keep], j[keep], k[keep]))
+
+
+def _map_with(sched, extra=None):
+    """Builder: traced coords (+ optional extra(coords) pytree)."""
+    def build():
+        lams = jnp.arange(sched.num_blocks, dtype=jnp.int32)
+        coords = sched.index_map(lams)
+        return coords, (extra(sched, coords, lams) if extra else None)
+    return build
+
+
+# ---------------------------------------------------------------------------
+# per-kind sweeps, n in 1..64
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["ltm", "utm"])
+def test_triangular_kinds_cover_and_invert(kind):
+    scheds = [S.make_schedule(kind, n) for n in range(1, N_MAX + 1)]
+    inv = None if kind == "utm" else (
+        lambda s, c, lams: M.ltm_inverse(c[0], c[1]))
+    results = jit_sweep([_map_with(s, inv) for s in scheds])
+    for sched, (coords, extra) in zip(scheds, results):
+        check_cover(coords, tril_cells(sched.n), str(sched))
+        if extra is not None:  # map -> inverse is the identity
+            np.testing.assert_array_equal(np.asarray(extra),
+                                          np.arange(sched.num_blocks))
+        if sched.n in HOST_NS:
+            check_host(sched, coords)
+
+
+@pytest.mark.parametrize("kind", ["bb"])
+def test_bb_covers_square_active_is_triangle(kind):
+    scheds = [S.make_schedule(kind, n) for n in range(1, N_MAX + 1)]
+    act = lambda s, c, lams: s.active(lams)
+    results = jit_sweep([_map_with(s, act) for s in scheds])
+    for sched, ((i, j), active) in zip(scheds, results):
+        n = sched.n
+        assert sched.num_blocks == n * n
+        # full launch covers the n*n square once; ACTIVE cells are the tri
+        check_cover((i, j), canon([a.ravel() for a in np.indices((n, n))]))
+        keep = np.asarray(active, bool)
+        check_cover((np.asarray(i)[keep], np.asarray(j)[keep]),
+                    tril_cells(n), str(sched))
+        assert keep.sum() == sched.domain_blocks
+        if n in HOST_NS:
+            check_host(sched, (i, j))
+
+
+def test_band_cover_and_invert():
+    cases = [(n, w) for n in range(1, N_MAX + 1)
+             for w in sorted({1, 2, (n + 1) // 2, n, n + 3}) if w >= 1]
+    scheds = [S.make_schedule("band", n, w=w) for n, w in cases]
+    results = jit_sweep([_map_with(s) for s in scheds])
+    for (n, w), sched, (coords, _) in zip(cases, scheds, results):
+        w_eff = min(w, n)
+        check_cover(coords, band_cells(n, w_eff), str(sched))
+        for lam in range(0, sched.num_blocks,
+                         max(1, sched.num_blocks // 17)):
+            i, j = sched.host_map(lam)
+            assert M.band_inverse(i, j, w_eff) == lam
+        if n in HOST_NS and w == 2:
+            check_host(sched, coords)
+
+
+def test_prefix_cover_and_invert():
+    cases = [(n, p) for n in range(1, N_MAX + 1)
+             for p in sorted({0, 1, (n + 1) // 2, n})]
+    scheds = [S.make_schedule("prefix", n, p=p) for n, p in cases]
+    results = jit_sweep([_map_with(s) for s in scheds])
+    for (n, p), sched, (coords, _) in zip(cases, scheds, results):
+        check_cover(coords, prefix_cells(n, min(p, n)), str(sched))
+        for lam in range(0, sched.num_blocks,
+                         max(1, sched.num_blocks // 17)):
+            i, j = sched.host_map(lam)
+            assert _member_inverse(sched, i, j) == lam
+        if n in HOST_NS and p == (n + 1) // 2:
+            check_host(sched, coords)
+
+
+def test_row_cover_and_invert():
+    scheds = [S.make_schedule("row", n) for n in range(1, N_MAX + 1)]
+    results = jit_sweep([_map_with(s) for s in scheds])
+    for sched, (coords, _) in zip(scheds, results):
+        n = sched.n
+        check_cover(coords, canon([a.ravel() for a in np.indices((1, n))]))
+        for lam in range(n):
+            assert sched.host_map(lam) == (0, lam)
+            assert _member_inverse(sched, 0, lam) == lam
+        check_host(sched, coords)
+
+
+def test_rb_active_covers_triangle():
+    scheds = [S.make_schedule("rb", n) for n in range(1, N_MAX + 1)]
+    act = lambda s, c, lams: s.active(lams)
+    results = jit_sweep([_map_with(s, act) for s in scheds])
+    for sched, ((i, j), active) in zip(scheds, results):
+        n = sched.n
+        h, w = sched.grid_shape
+        assert sched.num_blocks == h * w >= M.tri(n)
+        keep = np.asarray(active, bool)
+        check_cover((np.asarray(i)[keep], np.asarray(j)[keep]),
+                    tril_cells(n), str(sched))
+        if n in HOST_NS:
+            check_host(sched, (i, j), active_host=sched.host_active)
+
+
+@pytest.mark.parametrize("kind", ["tet"])
+def test_tet_cover_and_invert(kind):
+    scheds = [S.make_schedule(kind, n) for n in range(1, N_MAX + 1)]
+    inv = lambda s, c, lams: M.tet_inverse(*c)
+    results = jit_sweep([_map_with(s, inv) for s in scheds])
+    for sched, (coords, extra) in zip(scheds, results):
+        check_cover(coords, simplex_cells(sched.n), str(sched))
+        np.testing.assert_array_equal(np.asarray(extra),
+                                      np.arange(sched.num_blocks))
+        if sched.n in HOST_NS[:6]:  # host tet_map loops; cap the cost
+            check_host(sched, coords)
+
+
+@pytest.mark.parametrize("kind", ["bb3"])
+def test_bb3_covers_cube_active_is_simplex(kind):
+    scheds = [S.make_schedule(kind, n) for n in range(1, N_MAX + 1)]
+    act = lambda s, c, lams: s.active(lams)
+    results = jit_sweep([_map_with(s, act) for s in scheds])
+    for sched, (coords, active) in zip(scheds, results):
+        n = sched.n
+        assert sched.num_blocks == n ** 3
+        keep = np.asarray(active, bool)
+        check_cover(tuple(np.asarray(c)[keep] for c in coords),
+                    simplex_cells(n), str(sched))
+        assert keep.sum() == sched.domain_blocks
+        if n in HOST_NS[:6]:
+            check_host(sched, coords)
+
+
+def test_registry_aliases_resolve_to_same_schedule():
+    """Aliases share the class, so the canonical-name sweeps above cover
+    them; pin the resolution here instead of re-running 64-n sweeps."""
+    for a, b in (("ltm", "triangular"), ("bb", "dense"),
+                 ("tet", "tetrahedral"), ("bb3", "dense3d")):
+        assert type(S.make_schedule(a, 5)) is type(S.make_schedule(b, 5))
+
+
+def test_rec_enumerates_triangle_exactly():
+    for m in (1, 2, 3, 5):
+        k = 0
+        while m << k <= N_MAX:
+            n = m << k
+            sched = S.make_schedule("rec", n, m=m)
+            cells = sched.enumerate_host()
+            assert len(cells) == M.tri(n) == sched.domain_blocks
+            got = canon(tuple(np.array([c[d] for c in cells])
+                              for d in range(2)))
+            np.testing.assert_array_equal(got, tril_cells(n))
+            k += 1
+
+
+# ---------------------------------------------------------------------------
+# packed, with nested mixed members (incl. the decode-round RowSchedule)
+# ---------------------------------------------------------------------------
+
+
+def _nested_members(n: int):
+    """Deterministically split n tile-rows into mixed members cycling the
+    four supported kinds (sizes cycle 3,1,4,2 — coprime-ish with the kind
+    cycle so every (kind, size) pairing appears across the sweep)."""
+    sizes, rem = [], n
+    for c in range(64):
+        if rem == 0:
+            break
+        take = min((3, 1, 4, 2)[c % 4], rem)
+        sizes.append(take)
+        rem -= take
+    members = []
+    for idx, sz in enumerate(sizes):
+        kind = idx % 4
+        if kind == 0:
+            members.append(S.TriangularSchedule(n=sz))
+        elif kind == 1:
+            members.append(S.BandSchedule(n=sz, w=1 + idx % 3))
+        elif kind == 2:
+            members.append(S.PrefixSchedule(n=sz, p=idx % (sz + 1)))
+        else:
+            members.append(S.RowSchedule(n=sz))
+    return tuple(members)
+
+
+def test_packed_nested_cover_and_roundtrip():
+    packs = [S.make_schedule("packed", 0, members=_nested_members(n))
+             for n in range(1, N_MAX + 1)]
+    results = jit_sweep([_map_with(pk) for pk in packs])
+    for n, (pk, (coords, _)) in enumerate(zip(packs, results), start=1):
+        assert pk.n == n
+        expect = canon(tuple(np.array(v) for v in zip(
+            *[(r, i, j) for r, m in enumerate(pk.members)
+              for (i, j) in m.enumerate_host()])))
+        check_cover(coords, expect, f"packed n={n}")
+        # inverse: pack_lambda(host_map(lam)) == lam, exhaustively
+        for lam in range(pk.num_blocks):
+            assert pk.pack_lambda(*pk.host_map(lam)) == lam
+        if n in HOST_NS:
+            check_host(pk, coords)
+
+
+def test_packed_decode_round_is_row_pack():
+    """decode_round(kv_tiles) == packed RowSchedule members: the decode
+    grid is the same machinery the prefill pack fuzzes above."""
+    rounds = ([1], [3, 1, 5], [2] * 7, list(range(1, 9)))
+    packs = [PackedSchedule.decode_round(kv) for kv in rounds]
+    results = jit_sweep([_map_with(pk) for pk in packs])
+    for kv_tiles, pk, (coords, _) in zip(rounds, packs, results):
+        assert [m.n for m in pk.members] == kv_tiles
+        assert all(isinstance(m, S.RowSchedule) for m in pk.members)
+        assert pk.num_blocks == sum(kv_tiles)
+        cells = pk.enumerate_host()
+        assert cells == [(r, 0, j) for r, t in enumerate(kv_tiles)
+                         for j in range(t)]
+        check_host(pk, coords)

@@ -80,6 +80,13 @@ def test_engine_packed_prefill_matches_sequential():
     assert st_packed["prefill_launches"] == st_packed["admit_rounds"]
     assert st_seq["prefill_launches"] == sum(len(p) for p in prompts)
     assert st_packed["prefill_requests"] == len(prompts)
+    # prefill launches are counted APART from decode launches: decode
+    # rounds ran (tokens were generated) without touching the prefill
+    # counter, and every decode round landed in exactly one decode bucket.
+    assert st_packed["decode_rounds"] > 0
+    assert (st_packed["decode_packed_launches"]
+            + st_packed["decode_lockstep_launches"]
+            == st_packed["decode_rounds"])
 
 
 def test_engine_recurrent_arch_falls_back_to_sequential():
