@@ -19,10 +19,18 @@ valid KV prefix — sum_b ceil(len_b / blk) tiles) vs the lockstep
 pad-to-max decode (every slot pays max_b tiles; the full-cache masked
 einsum is its dense realization).
 
+``--train`` benchmarks the TRAINING step (forward + backward through the
+custom VJP) at document-length skew {1x, 4x, 16x}: one packed launch per
+direction over a ragged document batch — 3 x sum_r tri(n_r) tiles total —
+vs padding every document to the longest (padded-BB: 3 R n_max^2 blocks,
+the dense-masked batch; padded-LTM: 3 R tri(n_max), the triangular
+pad-to-max), wall-clocked through jax.vjp on the scan impls.
+
 Structural columns are hardware-independent block counts; wall-clock times
 the scan impls on CPU (the Pallas kernels time the same schedules on TPU).
 
-  PYTHONPATH=src python -m benchmarks.bench_packed [--decode] [--smoke]
+  PYTHONPATH=src python -m benchmarks.bench_packed [--decode|--train]
+                                                   [--smoke]
 """
 
 from __future__ import annotations
@@ -196,6 +204,100 @@ def main_decode(smoke: bool = False, out_path="artifacts/bench_packed_decode"
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Packed ragged-document TRAINING (fwd + bwd) vs pad-to-max training
+# ---------------------------------------------------------------------------
+
+
+def run_train(skews=(1, 4, 16), base_len: int = 256, docs: int = 4,
+              block: int = 16, h: int = 2, hkv: int = 1, d: int = 16,
+              out_path: str | None = None) -> list:
+    """One training step's attention work per skew ratio K: document 0 has
+    ``base_len`` tokens, the other docs ``base_len / K``. The packed path
+    runs ONE launch per direction (fwd + dq + dk/dv = 3 x sum_r tri(n_r)
+    tiles); the padded baselines pay 3 x R x n_max^2 (BB, the dense-masked
+    batch) or 3 x R x tri(n_max) (triangular pad-to-max). Wall-clock times
+    jax.vjp through the scan impls on both layouts."""
+    rows = []
+    for skew in skews:
+        short = max(block, base_len // skew)
+        lens = [base_len] + [short] * (docs - 1)
+        ns = [s // block for s in lens]
+        n_max = max(ns)
+        s_total = sum(lens)
+        psched = OPS.make_packed_sched(lens, block=block)
+
+        kq, kk, kv, ko = jax.random.split(jax.random.PRNGKey(skew), 4)
+        q = jax.random.normal(kq, (1, h, s_total, d), jnp.float32)
+        k = jax.random.normal(kk, (1, hkv, s_total, d), jnp.float32)
+        v = jax.random.normal(kv, (1, hkv, s_total, d), jnp.float32)
+        do = jax.random.normal(ko, (1, h, s_total, d), jnp.float32)
+
+        @jax.jit
+        def packed_step(q, k, v, do):
+            _, vjp = jax.vjp(lambda a, b, c: OPS.packed_prefill_attention(
+                a, b, c, psched, impl="scan"), q, k, v)
+            return vjp(do)
+
+        qp = jnp.zeros((docs, h, n_max * block, d), jnp.float32)
+        kp = jnp.zeros((docs, hkv, n_max * block, d), jnp.float32)
+        vp = jnp.zeros((docs, hkv, n_max * block, d), jnp.float32)
+        dop = jnp.zeros((docs, h, n_max * block, d), jnp.float32)
+        st = 0
+        for i, s in enumerate(lens):
+            qp = qp.at[i, :, :s].set(q[0, :, st:st + s])
+            kp = kp.at[i, :, :s].set(k[0, :, st:st + s])
+            vp = vp.at[i, :, :s].set(v[0, :, st:st + s])
+            dop = dop.at[i, :, :s].set(do[0, :, st:st + s])
+            st += s
+
+        @jax.jit
+        def padded_step(q, k, v, do):
+            _, vjp = jax.vjp(lambda a, b, c: OPS.triangular_attention(
+                a, b, c, impl="scan", block_q=block, block_k=block),
+                q, k, v)
+            return vjp(do)
+
+        t_packed = _time(packed_step, q, k, v, do)
+        t_padded = _time(padded_step, qp, kp, vp, dop)
+        rows.append({
+            "skew": skew, "doc_lens": lens, "block": block,
+            "launches": {"packed": 3, "padded": 3},
+            "tiles": {
+                "packed": 3 * sum(M.tri(n) for n in ns),
+                "padded_bb": 3 * docs * n_max * n_max,
+                "padded_ltm": 3 * docs * M.tri(n_max),
+            },
+            "times_ms": {"packed": t_packed * 1e3,
+                         "padded_ltm": t_padded * 1e3},
+        })
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+def main_train(smoke: bool = False,
+               out_path="artifacts/bench_packed_train.json"):
+    rows = run_train(base_len=64 if smoke else 256,
+                     block=8 if smoke else 16, out_path=out_path)
+    for r in rows:
+        t = r["tiles"]
+        tm = r["times_ms"]
+        print(f"  skew {r['skew']:3d}x docs={r['doc_lens']}: "
+              f"train tiles packed={t['packed']} "
+              f"padded-bb={t['padded_bb']} padded-ltm={t['padded_ltm']} "
+              f"t_packed={tm['packed']:.2f}ms "
+              f"t_padded-ltm={tm['padded_ltm']:.2f}ms")
+    hi = rows[-1]["tiles"]
+    assert hi["packed"] < hi["padded_ltm"] < hi["padded_bb"], (
+        "packed training must issue strictly fewer tiles than pad-to-max "
+        "under document-length skew")
+    print(f"  OK: {hi['packed']} < {hi['padded_ltm']} (LTM) < "
+          f"{hi['padded_bb']} (BB) train tiles at {rows[-1]['skew']}x skew")
+    return rows
+
+
 def main():
     rec = run(out_path="artifacts/bench_packed.json")
     b = rec["blocks"]
@@ -216,6 +318,9 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--decode", action="store_true",
                     help="benchmark the packed mixed-position decode round")
+    ap.add_argument("--train", action="store_true",
+                    help="benchmark the packed ragged-document training "
+                         "step (fwd + bwd) vs pad-to-max")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes (CI tier, scripts/check.sh)")
     args = ap.parse_args()
@@ -224,5 +329,7 @@ if __name__ == "__main__":
     os.makedirs("artifacts", exist_ok=True)
     if args.decode:
         main_decode(smoke=args.smoke)
+    elif args.train:
+        main_train(smoke=args.smoke)
     else:
         main()

@@ -8,7 +8,9 @@
   bench_attention   — the technique on causal flash attention (tiles/FLOPs/I)
   bench_packed      — packed ragged batch vs per-request vs padded launches,
                       plus --decode: packed mixed-position decode rounds vs
-                      lockstep pad-to-max at skew {1x, 4x, 16x}
+                      lockstep pad-to-max at skew {1x, 4x, 16x}, and
+                      --train: packed ragged-document fwd+bwd vs pad-to-max
+                      training at document-length skew {1x, 4x, 16x}
   bench_roofline    — §Roofline table from the dry-run artifacts (if present)
 
 --smoke is the CI tier: tiny n, scan impls only, seconds not minutes —
@@ -108,6 +110,13 @@ def main(argv=None):
     bench_packed.main_decode(
         smoke=args.smoke or args.fast,
         out_path="artifacts/bench_packed_decode.json")
+
+    print("=" * 72)
+    print("bench_packed --train (packed ragged-doc fwd+bwd vs pad-to-max)")
+    print("=" * 72)
+    bench_packed.main_train(
+        smoke=args.smoke or args.fast,
+        out_path="artifacts/bench_packed_train.json")
 
     print("=" * 72)
     print("bench_roofline (dry-run artifacts)")

@@ -1,0 +1,65 @@
+"""Packed ragged-document training: one launch per direction, zero pad.
+
+Training on documents of mixed lengths usually pads every document to the
+longest and runs a dense-masked backward — re-buying the O(n^2) bounding
+box the paper's g(lambda) eliminates. The packed path bin-packs the
+documents onto one PackedSchedule row (train/data.pack_documents), runs
+block-diagonal attention per document, and backpropagates through the
+packed custom VJP: forward, dq, and dk/dv each walk ONE 1-D grid of
+sum_r tri(n_r) tiles for the whole batch.
+
+This demo trains the same tiny model on the same skewed documents through
+both layouts and shows (a) identical losses, (b) the tile savings.
+
+  PYTHONPATH=src python examples/packed_train.py
+"""
+
+import jax
+import numpy as np
+
+from repro.configs import registry as REG
+from repro.core import mapping as M
+from repro.kernels.tri_attn import ops as OPS
+from repro.train import data as DATA
+from repro.train import optimizer as OPT
+from repro.train import train_step as TS
+
+
+def main():
+    cfg = REG.smoke_config("yi-9b")
+    block = 4
+    doc_lens = (37, 5, 11, 3)  # heavy length skew
+    docs = DATA.PackedDocsLM(cfg, doc_lens, block=block, seed=0)
+    psched = OPS.make_packed_sched(docs.member_lens, block=block,
+                                   window=cfg.sliding_window)
+
+    opt = OPT.OptConfig()
+    packed_step = TS.make_train_step(cfg, opt, packed=psched, block=block,
+                                     aux_weight=0.0)
+    padded_step = TS.make_train_step(cfg, opt, block=block, aux_weight=0.0)
+    state_p = TS.init_state(jax.random.key(0), cfg, opt)
+    state_d = TS.init_state(jax.random.key(0), cfg, opt)
+
+    for step in range(3):
+        state_p, met_p = packed_step(state_p, docs.batch(step))
+        state_d, met_d = padded_step(state_d, docs.padded_batch(step))
+        print(f"step {step}: packed loss {float(met_p['loss']):.4f}  "
+              f"padded loss {float(met_d['loss']):.4f}")
+        assert np.isclose(float(met_p["loss"]), float(met_d["loss"]),
+                          rtol=1e-5), "packed training must match padded"
+
+    ns = [s // block for s in docs.member_lens]
+    n_max = max(ns)
+    tiles_packed = 3 * sum(M.tri(n) for n in ns)
+    tiles_bb = 3 * len(ns) * n_max * n_max
+    print(f"attention tiles per train step (fwd + dq + dkv): "
+          f"packed={tiles_packed} padded-bb={tiles_bb} "
+          f"({tiles_bb / tiles_packed:.1f}x saved)")
+    assert tiles_packed < tiles_bb
+    print("packed_train OK — identical losses, "
+          f"{1 - tiles_packed / tiles_bb:.0%} of pad-to-max tiles "
+          "eliminated")
+
+
+if __name__ == "__main__":
+    main()

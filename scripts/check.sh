@@ -26,4 +26,9 @@ if [ "$#" -eq 0 ]; then
     # (benchmarks.run --smoke already covers the underlying run_decode).
     echo "== bench_packed --decode --smoke =="
     python -m benchmarks.bench_packed --decode --smoke
+    # Same for the packed ragged-document training step (fwd + bwd through
+    # the custom VJP): the --train surface and its packed < padded tile
+    # assertion must keep executing offline.
+    echo "== bench_packed --train --smoke =="
+    python -m benchmarks.bench_packed --train --smoke
 fi

@@ -565,7 +565,10 @@ def band_cm_map(lam, n, w):
     tail (cols n-w+1 .. n-1) is a reversed triangle mapped via ltm_map on the
     mirrored index. Exact; zero waste.
     """
-    w = min(w, n)
+    # min must stay traced-friendly: the packed backward gathers (n, w)
+    # from a runtime member table, so they may be traced scalars here.
+    w = min(w, n) if isinstance(w, (int, np.integer)) and \
+        isinstance(n, (int, np.integer)) else jnp.minimum(w, n)
     head_cols = n - w + 1
     head = head_cols * w
     if isinstance(lam, (int, np.integer)):

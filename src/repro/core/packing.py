@@ -163,6 +163,34 @@ def last_col_params(i, p_r):
     return jnp.maximum(i, p_r - 1)
 
 
+def member_cm_map_params(local, n_r, w_r, p_r):
+    """COLUMN-major member-local lambda -> (i, j) from normalized (n, w, p).
+
+    The backward dk/dv kernels enumerate each member's domain column-major
+    so per-column accumulators stay resident across the member's rows; this
+    is the cm counterpart of ``member_map_params`` (same two-family select,
+    same O(1) closed forms — core.mapping's band_cm_map / prefix_cm_map).
+    Both enumerations cover the same domain, so the packed ``offsets``
+    table is shared between directions."""
+    bi, bj = M.band_cm_map(local, n_r, w_r)
+    pi, pj = M.prefix_cm_map(local, n_r, jnp.maximum(p_r, 1))
+    is_p = p_r > 0
+    return jnp.where(is_p, pi, bi), jnp.where(is_p, pj, bj)
+
+
+def cm_first_row_params(j, p_r):
+    """First i of column j (prefix columns < p span every row; i == j
+    otherwise). The backward kernels' dk/dv accumulator-reset predicate."""
+    return jnp.where(j < p_r, 0, j)
+
+
+def cm_last_row_params(j, n_r, w_r):
+    """Last i of column j (band columns end w - 1 rows below the diagonal;
+    unbanded members have w == n so this is n - 1). The dk/dv emit
+    predicate."""
+    return jnp.minimum(j + w_r - 1, n_r - 1)
+
+
 def segment_origin_params(i, w_r, p_r):
     """Member-local lambda of the first tile of row i (both families)."""
     band = jnp.where(i < w_r - 1, M.tri(jnp.minimum(i, w_r - 1)),

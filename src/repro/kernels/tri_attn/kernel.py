@@ -13,9 +13,12 @@ Schedules: 'ltm' (causal), 'band' (sliding window, beyond-paper), 'prefix'
 machinery to the CONCATENATION of R ragged requests: one 1-D grid of
 sum_r blocks_r steps whose (7, R) member table rides in scalar-prefetch
 SMEM (core/packing.py supplies the O(log R) request search).
-packed_decode_fwd is the single-token variant — one mixed-position decode
-round per launch, the (4, R) RUNTIME member table in scalar-prefetch SMEM
-over a bucketed static capacity.
+packed_fwd's training counterpart packed_bwd walks the SAME member table
+twice (dq row-major, dk/dv column-major) so jax.grad through a ragged
+document batch is one launch per direction. packed_decode_fwd is the
+single-token variant — one mixed-position decode round per launch, the
+(5, R) RUNTIME member table (incl. band-limited kv_first) in
+scalar-prefetch SMEM over a bucketed static capacity.
 
 All kernels accumulate in f32 VMEM scratch and are validated in interpret
 mode against ref.py (tests/test_kernels_tri_attn.py). TPU notes: block_q and
@@ -441,18 +444,228 @@ def packed_fwd(q, k, v, psched: PackedTriSched, *, sm_scale=None,
 
 
 # ---------------------------------------------------------------------------
+# Packed backward: the training-side counterpart of packed_fwd. dq re-walks
+# the ROW-major packed grid (same enumeration as the forward, per-row dq
+# accumulator); dk/dv walk the COLUMN-major enumeration of every member
+# (core/packing.member_cm_map_params) so per-column accumulators stay
+# resident in VMEM scratch across the member's rows. Both directions share
+# the forward's (7, R) member table — rm_steps == cm_steps per member, so
+# the cumulative ``starts`` row delegates identically.
+# ---------------------------------------------------------------------------
+
+
+def _packed_decode_cm(lam, tbl, n_requests: int):
+    """Column-major packed decode: lambda + (7, R) table ->
+    (r, i, j, q_row, k_row). Same O(log R) search as _packed_decode; the
+    member map is the column-major two-family closed form."""
+    from repro.core import packing as PK
+
+    r = PK.request_from_starts(lam, _TableRow(tbl, 0), n_requests)
+    local = lam - tbl[0, r]
+    i, j = PK.member_cm_map_params(local, tbl[2, r], tbl[3, r], tbl[4, r])
+    return r, i, j, tbl[1, r] + i, tbl[1, r] + j
+
+
+def _packed_dq_kernel(tbl_ref, q_ref, k_ref, v_ref, do_ref, lse_ref,
+                      delta_ref, dq_ref, dq_s, *, n_requests: int, blk: int,
+                      scale: float):
+    from repro.core import packing as PK
+
+    lam = pl.program_id(2)
+    r, i, j, _, _ = _packed_decode(lam, tbl_ref, n_requests)
+
+    @pl.when(j == PK.first_col_params(i, tbl_ref[3, r]))
+    def _init():
+        dq_s[...] = jnp.zeros_like(dq_s)
+
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0].astype(jnp.float32)[:, None]
+    delta = delta_ref[0, 0].astype(jnp.float32)[:, None]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(_packed_token_mask(i, j, blk, tbl_ref[5, r], tbl_ref[6, r]),
+                  s, MASK_VALUE)
+    p = jnp.exp(s - lse)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta) * scale
+    dq_s[...] += jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+
+    @pl.when(j == PK.last_col_params(i, tbl_ref[4, r]))
+    def _emit():
+        dq_ref[0, 0] = dq_s[...].astype(dq_ref.dtype)
+
+
+def _packed_dkv_kernel(tbl_ref, q_ref, k_ref, v_ref, do_ref, lse_ref,
+                       delta_ref, dk_ref, dv_ref, dk_s, dv_s, *,
+                       n_requests: int, blk: int, scale: float):
+    from repro.core import packing as PK
+
+    lam = pl.program_id(2)
+    r, i, j, _, _ = _packed_decode_cm(lam, tbl_ref, n_requests)
+
+    @pl.when(i == PK.cm_first_row_params(j, tbl_ref[4, r]))
+    def _init():
+        dk_s[...] = jnp.zeros_like(dk_s)
+        dv_s[...] = jnp.zeros_like(dv_s)
+
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0].astype(jnp.float32)[:, None]
+    delta = delta_ref[0, 0].astype(jnp.float32)[:, None]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(_packed_token_mask(i, j, blk, tbl_ref[5, r], tbl_ref[6, r]),
+                  s, MASK_VALUE)
+    p = jnp.exp(s - lse)  # (blk, blk)
+    dv_s[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta) * scale
+    dk_s[...] += jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+
+    @pl.when(i == PK.cm_last_row_params(j, tbl_ref[2, r], tbl_ref[3, r]))
+    def _emit():
+        dk_ref[0, 0] = dk_s[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_s[...].astype(dv_ref.dtype)
+
+
+def packed_bwd(q, k, v, out, lse, do, psched: PackedTriSched, *,
+               sm_scale=None, interpret=True):
+    """Packed ragged backward: (dq, dk, dv) for a whole mixed-length batch
+    in ONE launch per direction (dq row-major, dk/dv column-major — the
+    same two 1-D grids the per-domain ``bwd`` uses, lifted to the packed
+    member table). dk/dv are group-summed to k/v's kv-head count. Replaces
+    R per-document pad-to-max backward launches: sum_r blocks_r grid steps
+    per direction, zero cross-request tiles."""
+    import numpy as np
+
+    b, h, s_len, d = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    scale = float(sm_scale if sm_scale is not None else 1.0 / (d ** 0.5))
+    assert s_len == psched.s_total, (s_len, psched.s_total)
+    blk = psched.blk
+    n_req = len(psched.members)
+    tbl = np.ascontiguousarray(psched.table())
+    delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+
+    def rm_q(b_, h_, lam, tbl_):
+        _, _, _, q_row, _ = _packed_decode(lam, tbl_, n_req)
+        return (b_, h_, q_row, 0)
+
+    def rm_kv(b_, h_, lam, tbl_):
+        _, _, _, _, k_row = _packed_decode(lam, tbl_, n_req)
+        return (b_, h_ // g, k_row, 0)
+
+    def rm_row(b_, h_, lam, tbl_):
+        _, _, _, q_row, _ = _packed_decode(lam, tbl_, n_req)
+        return (b_, h_, q_row)
+
+    dq = pl.pallas_call(
+        functools.partial(_packed_dq_kernel, n_requests=n_req, blk=blk,
+                          scale=scale),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, h, psched.steps),
+            in_specs=[
+                pl.BlockSpec((1, 1, blk, d), rm_q),
+                pl.BlockSpec((1, 1, blk, d), rm_kv),
+                pl.BlockSpec((1, 1, blk, d), rm_kv),
+                pl.BlockSpec((1, 1, blk, d), rm_q),
+                pl.BlockSpec((1, 1, blk), rm_row),
+                pl.BlockSpec((1, 1, blk), rm_row),
+            ],
+            out_specs=pl.BlockSpec((1, 1, blk, d), rm_q),
+            scratch_shapes=[pltpu.VMEM((blk, d), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(tbl, q, k, v, do, lse, delta)
+
+    def cm_q(b_, h_, lam, tbl_):
+        _, _, _, q_row, _ = _packed_decode_cm(lam, tbl_, n_req)
+        return (b_, h_, q_row, 0)
+
+    def cm_kv(b_, h_, lam, tbl_):
+        _, _, _, _, k_row = _packed_decode_cm(lam, tbl_, n_req)
+        return (b_, h_ // g, k_row, 0)
+
+    def cm_row(b_, h_, lam, tbl_):
+        _, _, _, q_row, _ = _packed_decode_cm(lam, tbl_, n_req)
+        return (b_, h_, q_row)
+
+    def cm_out(b_, h_, lam, tbl_):
+        _, _, _, _, k_row = _packed_decode_cm(lam, tbl_, n_req)
+        return (b_, h_, k_row, 0)
+
+    dk_ph, dv_ph = pl.pallas_call(
+        functools.partial(_packed_dkv_kernel, n_requests=n_req, blk=blk,
+                          scale=scale),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, h, psched.steps),
+            in_specs=[
+                pl.BlockSpec((1, 1, blk, d), cm_q),
+                pl.BlockSpec((1, 1, blk, d), cm_kv),
+                pl.BlockSpec((1, 1, blk, d), cm_kv),
+                pl.BlockSpec((1, 1, blk, d), cm_q),
+                pl.BlockSpec((1, 1, blk), cm_row),
+                pl.BlockSpec((1, 1, blk), cm_row),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1, blk, d), cm_out),
+                pl.BlockSpec((1, 1, blk, d), cm_out),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((blk, d), jnp.float32),
+                pltpu.VMEM((blk, d), jnp.float32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, s_len, d), k.dtype),
+            jax.ShapeDtypeStruct((b, h, s_len, d), v.dtype),
+        ],
+        interpret=interpret,
+    )(tbl, q, k, v, do, lse, delta)
+
+    if g > 1:  # sum per-q-head partials into kv heads
+        dk = dk_ph.reshape(b, hkv, g, s_len, d).sum(axis=2).astype(k.dtype)
+        dv = dv_ph.reshape(b, hkv, g, s_len, d).sum(axis=2).astype(v.dtype)
+    else:
+        dk, dv = dk_ph, dv_ph
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
 # Packed mixed-position DECODE: one 1-D grid per decode round over the
-# concatenation of every active slot's valid KV prefix (core/packing's
+# concatenation of every active slot's valid KV region (core/packing's
 # decode_round lifted to the kernel). Unlike the prefill table (baked
 # constants — the packing is static per compile), the decode table is
-# RUNTIME data: positions advance every round, so the (4, R) member table
+# RUNTIME data: positions advance every round, so the (5, R) member table
 # rides in as a scalar-prefetch SMEM operand and the grid is padded to a
 # static bucketed capacity. Rows:
 #   0 starts    cumulative tile offsets per member (ascending, starts[0]=0)
 #   1 slot      batch row of the member's KV cache / query / output
 #   2 kv_tiles  member tiles (emit at j == kv_tiles - 1); empty members
 #               (retired slots) carry 0, the pad member DECODE_NO_EMIT
-#   3 kv_len    valid KV tokens (token mask j*blk + t < kv_len); 0 = pad
+#   3 kv_len    valid KV END in tokens (token mask kpos < kv_len); 0 = pad
+#   4 kv_first  valid KV START in tokens (0 = attend the whole prefix; a
+#               BAND-limited member attends cache tiles
+#               [kv_first // blk, ceil(kv_len / blk)) and tokens
+#               [kv_first, kv_len) — the decode-round member of a sliding
+#               window over a non-rolling cache, so per-slot kv_tiles is
+#               capped near ceil(window / blk) however deep the position)
 # Convention: the LAST member is always the pad member owning the grid
 # steps [needed, capacity); its slot is n_slots (the virtual garbage row
 # of the (B+1)-row output) and it never inits state destructively for a
@@ -464,22 +677,26 @@ DECODE_NO_EMIT = 2 ** 30  # pad-member kv_tiles sentinel: emit never fires
 
 
 def _decode_member(lam, tbl, n_members: int):
-    """lambda + (4, R) decode table -> (r, slot, j, kv_tiles, kv_len).
+    """lambda + (5, R) decode table ->
+    (r, slot, j, kv_tiles, kv_len, kv_first).
 
     j is the member-local KV tile (RowSchedule members are single rows, so
-    the local lambda IS the column — no closed-form map needed). tbl may be
-    a jnp array or a Pallas SMEM ref."""
+    the local lambda IS the column — no closed-form map needed); the cache
+    tile it reads is kv_first // blk + j. tbl may be a jnp array or a
+    Pallas SMEM ref."""
     from repro.core import packing as PK
 
     r = PK.request_from_starts(lam, _TableRow(tbl, 0), n_members)
-    return r, tbl[1, r], lam - tbl[0, r], tbl[2, r], tbl[3, r]
+    return (r, tbl[1, r], lam - tbl[0, r], tbl[2, r], tbl[3, r],
+            tbl[4, r])
 
 
 def _packed_decode_kernel(tbl_ref, q_ref, k_ref, v_ref, o_ref,
                           m_s, l_s, acc_s, *, n_members: int, blk: int,
                           scale: float):
     lam = pl.program_id(1)
-    _, _, j, kv_tiles, kv_len = _decode_member(lam, tbl_ref, n_members)
+    _, _, j, kv_tiles, kv_len, kv_first = _decode_member(lam, tbl_ref,
+                                                         n_members)
 
     @pl.when(j == 0)
     def _init():
@@ -492,8 +709,9 @@ def _packed_decode_kernel(tbl_ref, q_ref, k_ref, v_ref, o_ref,
     v = v_ref[0, :, 0, :].astype(jnp.float32)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
-    kpos = j * blk + jax.lax.broadcasted_iota(jnp.int32, (1, blk), 1)
-    s = jnp.where(kpos < kv_len, s, MASK_VALUE)
+    kpos = (kv_first // blk + j) * blk + jax.lax.broadcasted_iota(
+        jnp.int32, (1, blk), 1)
+    s = jnp.where((kpos >= kv_first) & (kpos < kv_len), s, MASK_VALUE)
 
     m_prev = m_s[...]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
@@ -515,11 +733,13 @@ def packed_decode_fwd(q, k, v, tbl, *, capacity: int, blk: int,
 
     q: (B, H, D) — each slot's single rotated query; k, v: (B, S_cache,
     Hkv, D) — the NATIVE decode-cache layout (no transposes on the hot
-    path), new token already written. tbl: (4, R) runtime member table
+    path), new token already written. tbl: (5, R) runtime member table
     (ops.make_decode_table). Grid is (H, capacity): sum_r kv_tiles_r live
     steps + masked pad steps, vs the lockstep einsum's B * S_cache work.
-    Returns (B + 1, H, D): row B is the pad member's garbage row — callers
-    slice [:B] and mask by the member table's coverage.
+    Band-limited members (kv_first > 0) read only cache tiles
+    [kv_first // blk, ceil(kv_len / blk)). Returns (B + 1, H, D): row B is
+    the pad member's garbage row — callers slice [:B] and mask by the
+    member table's coverage.
     """
     b, h, d = q.shape
     s_cache, hkv = k.shape[1], k.shape[2]
@@ -530,18 +750,19 @@ def packed_decode_fwd(q, k, v, tbl, *, capacity: int, blk: int,
     n_members = tbl.shape[1]
 
     def q_spec(h_, lam, tbl_):
-        _, slot, _, _, _ = _decode_member(lam, tbl_, n_members)
+        _, slot, _, _, _, _ = _decode_member(lam, tbl_, n_members)
         return (jnp.minimum(slot, b - 1), h_, 0)
 
     def kv_spec(h_, lam, tbl_):
-        _, slot, j, _, _ = _decode_member(lam, tbl_, n_members)
+        _, slot, j, _, _, kv_first = _decode_member(lam, tbl_, n_members)
         return (jnp.minimum(slot, b - 1),
-                jnp.minimum(j, cache_tiles - 1), h_ // g, 0)
+                jnp.minimum(kv_first // blk + j, cache_tiles - 1),
+                h_ // g, 0)
 
     def o_spec(h_, lam, tbl_):
         # pad member's slot == b: the extra garbage row, so pad steps can
         # never flush stale VMEM over a live slot's emitted block.
-        _, slot, _, _, _ = _decode_member(lam, tbl_, n_members)
+        _, slot, _, _, _, _ = _decode_member(lam, tbl_, n_members)
         return (slot, h_, 0)
 
     kernel = functools.partial(_packed_decode_kernel, n_members=n_members,

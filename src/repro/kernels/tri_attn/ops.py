@@ -11,8 +11,10 @@ the schedule kind from the mask parameters, and dispatches between:
 
 ``packed_prefill_attention`` + ``make_packed_sched`` are the ragged-batch
 variant: R requests of mixed lengths concatenated along S, attended
-block-diagonally in ONE launch over the core/packing PackedSchedule grid
-(forward-only — the serving engine's bulk-admission prefill).
+block-diagonally in ONE launch over the core/packing PackedSchedule grid.
+It serves the engine's bulk-admission prefill AND — via custom VJP over
+the packed dq / dk/dv kernels — ragged document-batch training: jax.grad
+issues one packed launch per direction on both the pallas and scan paths.
 
 ``packed_decode_attention`` + ``make_decode_table`` + ``DecodeRoundSpec``
 are the DECODE-time analogue: one mixed-position decode round per launch,
@@ -92,15 +94,45 @@ def make_packed_sched(seq_lens, *, block: int, window=None,
     return PackedTriSched(members=tuple(members))
 
 
+@functools.lru_cache(maxsize=None)
+def _packed_pallas_attention(psched: PackedTriSched, scale: float,
+                             interpret: bool):
+    """Custom-VJP packed Pallas attention for static (psched, scale):
+    jax.grad issues ONE packed_bwd launch per direction (dq row-major,
+    dk/dv column-major) over the forward's (7, R) member table — no
+    fallback to autodiff through the forward, no pad-to-max."""
+
+    @jax.custom_vjp
+    def attn(q, k, v):
+        out, _ = K.packed_fwd(q, k, v, psched, sm_scale=scale,
+                              interpret=interpret)
+        return out
+
+    def attn_fwd(q, k, v):
+        out, lse = K.packed_fwd(q, k, v, psched, sm_scale=scale,
+                                interpret=interpret)
+        return out, (q, k, v, out, lse)
+
+    def attn_bwd(res, do):
+        q, k, v, out, lse = res
+        return K.packed_bwd(q, k, v, out, lse, do, psched, sm_scale=scale,
+                            interpret=interpret)
+
+    attn.defvjp(attn_fwd, attn_bwd)
+    return attn
+
+
 def packed_prefill_attention(q, k, v, psched: PackedTriSched, *,
                              sm_scale=None, impl: str = "scan",
                              interpret: bool = True):
-    """Ragged batched-prefill attention over the packed layout.
+    """Ragged batched attention over the packed layout (prefill AND train).
 
     q: (B, H, S_total, D); k, v: (B, Hkv, S_total, D) — every batch row
     shares the same packing (the engine uses B=1). One launch covers all
     requests: sum_r blocks_r grid steps, zero cross-request tiles.
-    Forward-only (prefill is inference). Returns (B, H, S_total, D).
+    Differentiable on the 'pallas' and 'scan' paths via custom VJP (packed
+    dq / dk/dv launches over the same member table — the ragged
+    document-batch training fast path). Returns (B, H, S_total, D).
     """
     b, h, s_len, d = q.shape
     assert s_len == psched.s_total, (
@@ -108,9 +140,7 @@ def packed_prefill_attention(q, k, v, psched: PackedTriSched, *,
         f"{psched.s_total}")
     scale = float(sm_scale if sm_scale is not None else 1.0 / (d ** 0.5))
     if impl == "pallas":
-        out, _ = K.packed_fwd(q, k, v, psched, sm_scale=scale,
-                              interpret=interpret)
-        return out
+        return _packed_pallas_attention(psched, scale, interpret)(q, k, v)
     if impl == "scan":
         return SC.make_packed_scan_attention(psched, scale)(q, k, v)
     if impl == "ref":
@@ -136,7 +166,7 @@ def packed_prefill_attention(q, k, v, psched: PackedTriSched, *,
 class DecodeRoundSpec:
     """STATIC half of a packed decode round (hashable — it is a jit static
     arg). The dynamic half — which slots are live, at which KV lengths —
-    is the (4, R) member table built fresh each round by
+    is the (5, R) member table built fresh each round by
     ``make_decode_table`` and passed as a traced array, so positions can
     advance every round without recompiling; only a change of capacity
     bucket (or batch geometry) compiles a new program."""
@@ -146,10 +176,13 @@ class DecodeRoundSpec:
     blk: int        # KV tile edge (divides S_cache)
     impl: str = "scan"
 
+    # the dynamic half is the (5, R) member table (make_decode_table):
+    # starts / slot / kv_tiles / kv_len / kv_first
+
 
 def make_decode_table(kv_lens, slots, *, blk: int, n_members: int,
-                      n_slots: int, s_cache: int = 0):
-    """Build one decode round's (4, n_members) int32 member table.
+                      n_slots: int, s_cache: int = 0, window=None):
+    """Build one decode round's (5, n_members) int32 member table.
 
     kv_lens[i] is live slot ``slots[i]``'s valid KV prefix in TOKENS
     (min(pos + 1, S_cache) — for rolling sliding-window buffers the valid
@@ -157,16 +190,33 @@ def make_decode_table(kv_lens, slots, *, blk: int, n_members: int,
     Unused member columns are empty (0 tiles, skipped by the lambda
     search); the last column is the pad member (slot == n_slots, the
     garbage output row; kv_tiles == DECODE_NO_EMIT so it never emits).
+
+    window (scalar or per-slot sequence, tokens) BAND-limits each member:
+    the slot attends only KV tokens [max(0, kv_len - w), kv_len), i.e.
+    cache tiles [kv_first // blk, ceil(kv_len / blk)) — at most
+    ceil(w / blk) + 1 tiles however deep the position, instead of the full
+    ceil(kv_len / blk)-tile prefix. Only valid when cache row index ==
+    absolute token position (a NON-rolling cache: a rolling SWA buffer is
+    already window-sized and its rows alias positions mod S_cache, so its
+    members must keep window=None).
+
     Returns (table, needed) with ``needed`` the live tile count —
-    sum_r ceil(kv_len_r / blk), the number the lockstep pad-to-max round
-    would inflate to n_live * max_r ceil(kv_len_r / blk).
+    sum_r member tiles, the number the lockstep pad-to-max round would
+    inflate to n_live * max_r tiles.
     """
     kv_lens = [int(s) for s in kv_lens]
     slots = [int(s) for s in slots]
+    windows = list(window) if isinstance(window, (list, tuple)) \
+        else [window] * len(kv_lens)
+    assert len(windows) == len(kv_lens), (
+        f"per-slot window list must match the round: {len(windows)} "
+        f"windows for {len(kv_lens)} live slots")
     assert len(kv_lens) == len(slots) <= n_members - 1, (
         f"{len(kv_lens)} live members need table width >= "
         f"{len(kv_lens) + 1}, got {n_members}")
     assert all(s >= 1 for s in kv_lens), "live slots attend >= 1 token"
+    assert all(w is None or w >= 1 for w in windows), (
+        "band-limited slots attend >= 1 token windows")
     # A kv_len beyond the cache would be silently corrupted downstream
     # (the kernel clamps the tile INDEX in-bounds but the token mask
     # would keep admitting the phantom tail) — reject it here, where the
@@ -177,13 +227,14 @@ def make_decode_table(kv_lens, slots, *, blk: int, n_members: int,
             f"kv_lens {kv_lens} exceed the KV cache ({s_cache} rows); "
             f"clamp to min(pos + 1, S_cache)")
     cols, cur = [], 0
-    for kl, sl in zip(kv_lens, slots):
-        t = -(-kl // blk)
-        cols.append((cur, sl, t, kl))
+    for kl, sl, w in zip(kv_lens, slots, windows):
+        first = 0 if w is None else max(0, kl - int(w))
+        t = -(-kl // blk) - first // blk
+        cols.append((cur, sl, t, kl, first))
         cur += t
     while len(cols) < n_members - 1:
-        cols.append((cur, 0, 0, 0))
-    cols.append((cur, n_slots, DECODE_NO_EMIT, 0))
+        cols.append((cur, 0, 0, 0, 0))
+    cols.append((cur, n_slots, DECODE_NO_EMIT, 0, 0))
     return np.asarray(cols, np.int32).T.copy(), cur
 
 
@@ -203,7 +254,7 @@ def packed_decode_attention(q, k_cache, v_cache, tbl,
     b, h, d = q.shape
     s_cache = k_cache.shape[1]
     scale = float(sm_scale if sm_scale is not None else 1.0 / (d ** 0.5))
-    assert tbl.shape == (4, spec.n_members), (tbl.shape, spec.n_members)
+    assert tbl.shape == (5, spec.n_members), (tbl.shape, spec.n_members)
     assert s_cache % spec.blk == 0, (s_cache, spec.blk)
     assert spec.capacity >= 1
     if spec.impl == "pallas":
@@ -218,7 +269,9 @@ def packed_decode_attention(q, k_cache, v_cache, tbl,
                                      n_members=spec.n_members, scale=scale)
     if spec.impl == "ref":
         kv_len = _slot_kv_lens(tbl, b)
-        valid = jnp.arange(s_cache)[None, :] < kv_len[:, None]  # (B, S)
+        kv_first = _slot_kv_firsts(tbl, b)
+        srng = jnp.arange(s_cache)[None, :]
+        valid = (srng >= kv_first[:, None]) & (srng < kv_len[:, None])
         out = _masked_decode_einsum(q, k_cache, v_cache, valid, scale)
         return jnp.where(kv_len[:, None, None] > 0, out, 0)
     raise ValueError(f"unknown impl {spec.impl!r}")
@@ -231,8 +284,14 @@ def _covered_slots(tbl, b):
 
 
 def _slot_kv_lens(tbl, b):
-    """(B,) int32 valid KV length per slot (0 where no live member)."""
+    """(B,) int32 valid KV end per slot (0 where no live member)."""
     return jnp.zeros((b + 1,), jnp.int32).at[tbl[1]].max(tbl[3])[:b]
+
+
+def _slot_kv_firsts(tbl, b):
+    """(B,) int32 valid KV start per slot (band-limited members; 0 when
+    the member attends its whole prefix or the slot has no member)."""
+    return jnp.zeros((b + 1,), jnp.int32).at[tbl[1]].max(tbl[4])[:b]
 
 
 def _masked_decode_einsum(q, k_cache, v_cache, valid, scale):

@@ -145,25 +145,151 @@ def _packed_fwd_cell(q, k, v, psched: PackedTriSched, scale):
     return out, lse
 
 
+def _packed_dq_cell(q, k, v, do, lse, delta, psched: PackedTriSched, scale):
+    """Packed dq, one (batch, kv-head) cell — the row-major backward scan
+    over the SAME packed lambda grid as _packed_fwd_cell (per-row dq
+    accumulator, unconditional row write: each member's rows are
+    lambda-contiguous, so the row's last column leaves the final value)."""
+    from repro.core import packing as PK
+
+    g, s_len, d = q.shape
+    blk = psched.blk
+    n_req = len(psched.members)
+    tbl = jnp.asarray(psched.table())
+
+    def step(carry, lam):
+        dq_acc, dq = carry
+        r, i, j, row_q, row_k = _packed_decode(lam, tbl, n_req)
+        reset = j == PK.first_col_params(i, tbl[3, r])
+        dq_acc = jnp.where(reset, 0.0, dq_acc)
+        qi = _slice_rows(q, row_q, blk).astype(jnp.float32)
+        kj = _slice_rows(k, row_k, blk).astype(jnp.float32)
+        vj = _slice_rows(v, row_k, blk).astype(jnp.float32)
+        doi = _slice_rows(do, row_q, blk).astype(jnp.float32)
+        lse_i = jax.lax.dynamic_slice(lse, (0, row_q * blk), (g, blk))
+        dlt_i = jax.lax.dynamic_slice(delta, (0, row_q * blk), (g, blk))
+        s = jnp.einsum("gqd,kd->gqk", qi, kj,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(
+            _packed_token_mask(i, j, blk, tbl[5, r], tbl[6, r])[None], s,
+            MASK_VALUE)
+        p = jnp.exp(s - lse_i[..., None])
+        dp = jnp.einsum("gqd,kd->gqk", doi, vj,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - dlt_i[..., None]) * scale
+        dq_acc = dq_acc + jnp.einsum("gqk,kd->gqd", ds, kj,
+                                     preferred_element_type=jnp.float32)
+        dq = _update_rows(dq, dq_acc.astype(dq.dtype), row_q, blk)
+        return (dq_acc, dq), None
+
+    init = (jnp.zeros((g, blk, d), jnp.float32),
+            jnp.zeros((g, s_len, d), q.dtype))
+    (_, dq), _ = jax.lax.scan(
+        step, init, jnp.arange(psched.steps, dtype=jnp.int32))
+    return dq
+
+
+def _packed_dkv_cell(q, k, v, do, lse, delta, psched: PackedTriSched, scale):
+    """Packed dk/dv, one (batch, kv-head) cell — COLUMN-major packed scan
+    (core/packing.member_cm_map_params): each member's column's rows are
+    lambda-contiguous, so per-column accumulators carry exactly like the
+    per-domain _dkv_cell."""
+    from repro.core import packing as PK
+    from repro.kernels.tri_attn.kernel import _packed_decode_cm
+
+    g, s_len, d = q.shape
+    blk = psched.blk
+    n_req = len(psched.members)
+    tbl = jnp.asarray(psched.table())
+
+    def step(carry, lam):
+        dk_acc, dv_acc, dk, dv = carry
+        r, i, j, row_q, row_k = _packed_decode_cm(lam, tbl, n_req)
+        reset = i == PK.cm_first_row_params(j, tbl[4, r])
+        dk_acc = jnp.where(reset, 0.0, dk_acc)
+        dv_acc = jnp.where(reset, 0.0, dv_acc)
+        qi = _slice_rows(q, row_q, blk).astype(jnp.float32)
+        kj = _slice_rows(k, row_k, blk).astype(jnp.float32)
+        vj = _slice_rows(v, row_k, blk).astype(jnp.float32)
+        doi = _slice_rows(do, row_q, blk).astype(jnp.float32)
+        lse_i = jax.lax.dynamic_slice(lse, (0, row_q * blk), (g, blk))
+        dlt_i = jax.lax.dynamic_slice(delta, (0, row_q * blk), (g, blk))
+        s = jnp.einsum("gqd,kd->gqk", qi, kj,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(
+            _packed_token_mask(i, j, blk, tbl[5, r], tbl[6, r])[None], s,
+            MASK_VALUE)
+        p = jnp.exp(s - lse_i[..., None])  # (G, blk, blk)
+        dv_acc = dv_acc + jnp.einsum("gqk,gqd->kd", p, doi,
+                                     preferred_element_type=jnp.float32)
+        dp = jnp.einsum("gqd,kd->gqk", doi, vj,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - dlt_i[..., None]) * scale
+        dk_acc = dk_acc + jnp.einsum("gqk,gqd->kd", ds, qi,
+                                     preferred_element_type=jnp.float32)
+        dk = _update_rows(dk, dk_acc.astype(dk.dtype), row_k, blk)
+        dv = _update_rows(dv, dv_acc.astype(dv.dtype), row_k, blk)
+        return (dk_acc, dv_acc, dk, dv), None
+
+    init = (jnp.zeros((blk, d), jnp.float32), jnp.zeros((blk, d), jnp.float32),
+            jnp.zeros((s_len, d), k.dtype), jnp.zeros((s_len, d), v.dtype))
+    (_, _, dk, dv), _ = jax.lax.scan(
+        step, init, jnp.arange(psched.steps, dtype=jnp.int32))
+    return dk, dv
+
+
 @functools.lru_cache(maxsize=None)
 def make_packed_scan_attention(psched: PackedTriSched, scale: float):
-    """Forward-only packed ragged attention for static (psched, scale).
+    """Packed ragged attention for static (psched, scale) — custom VJP.
 
     q (B, H, S_total, D); k, v (B, Hkv, S_total, D) -> (B, H, S_total, D).
-    Prefill is inference — no VJP (training still uses the per-domain
-    schedules)."""
+    The backward is the packed dq (row-major) + dk/dv (column-major) scans
+    over the same member table: jax.grad through a ragged document batch
+    costs 3 x sum_r blocks_r tile-matmuls total, never the pad-to-max
+    bounding box (the training-path analogue of the prefill claim)."""
 
-    cell = jax.vmap(jax.vmap(  # over B, then Hkv
+    cell_fwd = jax.vmap(jax.vmap(  # over B, then Hkv
         lambda q, k, v: _packed_fwd_cell(q, k, v, psched, scale),
         in_axes=(0, 0, 0)), in_axes=(0, 0, 0))
+    cell_dq = jax.vmap(jax.vmap(
+        lambda q, k, v, do, lse, dlt: _packed_dq_cell(
+            q, k, v, do, lse, dlt, psched, scale),
+        in_axes=(0, 0, 0, 0, 0, 0)), in_axes=(0, 0, 0, 0, 0, 0))
+    cell_dkv = jax.vmap(jax.vmap(
+        lambda q, k, v, do, lse, dlt: _packed_dkv_cell(
+            q, k, v, do, lse, dlt, psched, scale),
+        in_axes=(0, 0, 0, 0, 0, 0)), in_axes=(0, 0, 0, 0, 0, 0))
 
-    def attn(q, k, v):
+    def _group(q, hkv):  # (B, H, S, D) -> (B, Hkv, G, S, D)
         b, h, s, d = q.shape
-        hkv = k.shape[1]
-        qg = q.reshape(b, hkv, h // hkv, s, d)
-        out_g, _ = cell(qg, k, v)
-        return out_g.reshape(b, h, s, d)
+        return q.reshape(b, hkv, h // hkv, s, d)
 
+    def _ungroup(q):  # inverse
+        b, hkv, g, s, d = q.shape
+        return q.reshape(b, hkv * g, s, d)
+
+    @jax.custom_vjp
+    def attn(q, k, v):
+        out, _ = attn_fwd(q, k, v)
+        return out
+
+    def attn_fwd(q, k, v):
+        hkv = k.shape[1]
+        out_g, lse_g = cell_fwd(_group(q, hkv), k, v)
+        return _ungroup(out_g), (q, k, v, _ungroup(out_g), lse_g)
+
+    def attn_bwd(res, do):
+        q, k, v, out, lse_g = res
+        hkv = k.shape[1]
+        delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32),
+                        axis=-1)  # (B, H, S)
+        qg, dog = _group(q, hkv), _group(do, hkv)
+        dg = _group(delta[..., None], hkv)[..., 0]  # (B, Hkv, G, S)
+        dq = cell_dq(qg, k, v, dog, lse_g, dg)
+        dk, dv = cell_dkv(qg, k, v, dog, lse_g, dg)
+        return _ungroup(dq), dk, dv
+
+    attn.defvjp(attn_fwd, attn_bwd)
     return attn
 
 
@@ -174,10 +300,10 @@ def packed_decode_scan(q, k, v, tbl, *, capacity: int, blk: int,
     Mirrors the packed decode Pallas kernel 1:1 — same member table, same
     tile enumeration, same online-softmax order — but vectorizes the H axis
     in one pass instead of a grid dimension. q: (B, H, D); k, v:
-    (B, S_cache, Hkv, D) native cache layout; tbl: (4, R) TRACED member
-    table (runtime data, the whole round recompiles only when the static
-    ``capacity`` bucket changes). Returns (B, H, D) with slots not covered
-    by any member left zero."""
+    (B, S_cache, Hkv, D) native cache layout; tbl: (5, R) TRACED member
+    table (runtime data, incl. the band-limit kv_first row; the whole
+    round recompiles only when the static ``capacity`` bucket changes).
+    Returns (B, H, D) with slots not covered by any member left zero."""
     b, h, d = q.shape
     s_cache, hkv = k.shape[1], k.shape[2]
     g = h // hkv
@@ -185,9 +311,10 @@ def packed_decode_scan(q, k, v, tbl, *, capacity: int, blk: int,
 
     def step(carry, lam):
         m, l, acc, out = carry
-        _, slot, j, kv_tiles, kv_len = _decode_member(lam, tbl, n_members)
+        _, slot, j, kv_tiles, kv_len, kv_first = _decode_member(
+            lam, tbl, n_members)
         slot_c = jnp.minimum(slot, b - 1)
-        j_c = jnp.minimum(j, cache_tiles - 1)
+        j_c = jnp.minimum(kv_first // blk + j, cache_tiles - 1)
         reset = j == 0
         m = jnp.where(reset, MASK_VALUE, m)
         l = jnp.where(reset, 0.0, l)
@@ -204,8 +331,9 @@ def packed_decode_scan(q, k, v, tbl, *, capacity: int, blk: int,
         qg = qs.reshape(hkv, g, d)
         s = jnp.einsum("kgd,tkd->kgt", qg, kb,
                        preferred_element_type=jnp.float32) * scale
-        kpos = j * blk + jnp.arange(blk, dtype=jnp.int32)
-        s = jnp.where(kpos[None, None, :] < kv_len, s, MASK_VALUE)
+        kpos = (kv_first // blk + j) * blk + jnp.arange(blk, dtype=jnp.int32)
+        s = jnp.where((kpos[None, None, :] >= kv_first)
+                      & (kpos[None, None, :] < kv_len), s, MASK_VALUE)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
         alpha = jnp.exp(m - m_new)
         p = jnp.exp(s - m_new)

@@ -85,7 +85,10 @@ def attention(params, x, cfg, *, positions, prefix: int = 0,
 
     packed: optional PackedTriSched — S is then the concatenation of a
     ragged request batch and attention is block-diagonal per request (the
-    batched ragged-prefill path; ``positions`` must restart per request).
+    batched ragged-prefill path AND the ragged document-batch training
+    path: the packed attention carries a custom VJP, so jax.grad issues
+    one packed launch per direction; ``positions`` must restart per
+    request/document).
     """
     b, s, d = x.shape
     h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -121,7 +124,10 @@ def attention(params, x, cfg, *, positions, prefix: int = 0,
         ot = attn_ops.packed_prefill_attention(
             qt, kt, vt, packed,
             impl="pallas" if attn_impl == "pallas" else "scan")
-        ctx = ot.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+        # same checkpoint name as the per-domain path so the training-mode
+        # remat policy can save the context across the packed VJP too
+        ctx = jax.ad_checkpoint.checkpoint_name(
+            ot.transpose(0, 2, 1, 3).reshape(b, s, h * hd), "attn_out")
         return ctx @ params["wo"], k, v
     blk = block
     while s % blk:
@@ -202,7 +208,7 @@ def packed_decode_attention(params, x, cfg, *, cache_k, cache_v, pos,
     each live slot attends ONLY its own valid KV prefix
     (sum_r ceil(kv_len_r / blk) tiles in one launch instead of the
     lockstep einsum's B * S_cache pad-to-max work). decode_tbl is the
-    round's traced (4, R) member table, decode_spec its static half
+    round's traced (5, R) member table, decode_spec its static half
     (ops.DecodeRoundSpec). Slots without a live member get zero attention
     output (their k/v cache write still happens, matching lockstep)."""
     b, _, d = x.shape

@@ -136,10 +136,21 @@ def cross_entropy(logits, labels, mask, vocab_size: int):
 
 def loss_fn(params, cfg, batch, *, attn_impl: str = "scan",
             remat: bool = True, aux_weight: float = 0.01, block: int = 512,
-            act_sharding=None):
+            act_sharding=None, packed=None):
+    """packed: optional PackedTriSched — the ragged document-batch training
+    fast path. ``batch["tokens"]`` is then (B, S_total), the concatenation
+    of bin-packed documents (train/data.pack_documents); attention is
+    block-diagonal per document (per-doc causal isolation) and the backward
+    runs the packed dq / dk/dv launches instead of R pad-to-max ones.
+    ``batch["positions"]`` ((B, S_total), restarting per document) and
+    ``batch["mask"]`` (1 on every real token — each has a next-token
+    target drawn with the document — and 0 on the pad tail rows) carry
+    the per-document bookkeeping."""
     hidden, aux, _ = forward(params, cfg, batch, attn_impl=attn_impl,
                              remat=remat, block=block,
-                             act_sharding=act_sharding)
+                             act_sharding=act_sharding,
+                             positions=batch.get("positions"),
+                             packed=packed)
     logits = logits_from_hidden(params, cfg, hidden)
     labels = batch["labels"]
     mask = batch.get("mask")

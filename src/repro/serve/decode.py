@@ -110,9 +110,27 @@ def _packed_decode_forward(params, cfg, cache, tokens, pos, tbl, spec):
                           decode_spec=spec)
 
 
+def make_decode_table(kv_lens, slots, *, blk: int, n_members: int,
+                      n_slots: int, s_cache: int = 0, window=None):
+    """Serve-side decode-table builder — the band-limited variant.
+
+    Delegates to ops.make_decode_table; ``window`` (tokens, scalar or
+    per-slot) caps each slot's attended region at its LAST w tokens, so
+    per-slot kv_tiles stays near ceil(w / blk) however deep the position —
+    the decode-round analogue of the band member (a RowSchedule that keeps
+    only its rightmost tiles). Only valid when cache row index == absolute
+    position (a non-rolling cache, e.g. a max_len prefix cache serving a
+    windowed policy); rolling SWA buffers are already window-sized and
+    must keep window=None.
+    """
+    return attn_ops.make_decode_table(
+        kv_lens, slots, blk=blk, n_members=n_members, n_slots=n_slots,
+        s_cache=s_cache, window=window)
+
+
 def decode_step_packed(params, cfg, cache, tokens, pos, kv_lens, slots, *,
                        block: int = 16, impl: str = "scan",
-                       n_members: int = 0, capacity: int = 0):
+                       n_members: int = 0, capacity: int = 0, window=None):
     """One PACKED decode round: every live slot advances one token in ONE
     launch per attention layer, each attending only its own valid KV
     prefix — sum_r ceil(kv_len_r / blk) tiles instead of the lockstep
@@ -122,9 +140,10 @@ def decode_step_packed(params, cfg, cache, tokens, pos, kv_lens, slots, *,
     are fine — they are not in ``slots``). kv_lens/slots: host lists — live
     slots' valid KV token counts (min(pos + 1, S_cache)) and batch rows.
     n_members/capacity pin the table width / grid bucket (0 = derive:
-    B + 1 members, power-of-two capacity). Returns
-    (logits, new_cache, info) with info the round's tile accounting:
-    {"tiles": live tiles, "tiles_padded": n_live * max tiles,
+    B + 1 members, power-of-two capacity). window band-limits each slot to
+    its last w tokens (see make_decode_table — non-rolling caches only).
+    Returns (logits, new_cache, info) with info the round's tile
+    accounting: {"tiles": live tiles, "tiles_padded": n_live * max tiles,
      "capacity": static grid size}.
 
     Only attention layers change behavior; recurrent mixers decode their
@@ -134,6 +153,14 @@ def decode_step_packed(params, cfg, cache, tokens, pos, kv_lens, slots, *,
     """
     b = tokens.shape[0]
     n_members = n_members or b + 1
+    # Band-limiting assumes cache row index == absolute position; a
+    # rolling SWA cache (layers._decode_qkv writes slot pos % S_cache)
+    # breaks that once any slot wraps, silently attending the wrong
+    # token subset — reject here, where cfg is known.
+    assert cfg.sliding_window is None or window is None, (
+        "window= band-limiting is invalid over a rolling sliding-window "
+        "cache (rows alias positions mod S_cache); the rolling buffer is "
+        "already window-sized — keep window=None")
     # every attention layer shares one cache geometry (cfg-global S_cache)
     s_cache = _attn_cache_len(cfg, cache)
     blk = min(block, s_cache)
@@ -141,7 +168,7 @@ def decode_step_packed(params, cfg, cache, tokens, pos, kv_lens, slots, *,
         blk //= 2
     tbl, needed = attn_ops.make_decode_table(
         kv_lens, slots, blk=blk, n_members=n_members, n_slots=b,
-        s_cache=s_cache)
+        s_cache=s_cache, window=window)
     capacity = capacity or round_capacity(needed)
     assert capacity >= needed, (capacity, needed)
     spec = attn_ops.DecodeRoundSpec(n_members=n_members, capacity=capacity,
@@ -149,7 +176,7 @@ def decode_step_packed(params, cfg, cache, tokens, pos, kv_lens, slots, *,
     logits, new_cache = _packed_decode_forward(
         params, cfg, cache, tokens, jnp.asarray(pos, jnp.int32),
         jnp.asarray(tbl), spec)
-    tiles_max = max(-(-int(l) // blk) for l in kv_lens)
+    tiles_max = int(np.max(tbl[2, :len(list(kv_lens))])) if kv_lens else 0
     info = {"tiles": needed, "tiles_padded": len(list(kv_lens)) * tiles_max,
             "capacity": capacity, "blk": blk}
     return logits, new_cache, info

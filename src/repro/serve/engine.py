@@ -5,12 +5,18 @@ absolute position (per-sequence pos vector — see decode_attention), so a
 finished slot can be refilled with a new request without draining the
 batch.
 
-Admission is BULK: each admit round gathers every free slot's next request
-and prefills them all in ONE packed ragged launch (_admit_batch ->
+Admission is BULK: each admit round gathers a request per free slot and
+prefills them all in ONE packed ragged launch (_admit_batch ->
 decode.packed_prefill over the core/packing PackedSchedule grid —
 sum_r tri(n_r) tiles, no per-request launches, no pad-to-max), then
 splices each request's KV rows out of the packed states into its slot's
-cache. Architectures with recurrent token mixers (mamba/rwkv) fall back to
+cache. Which requests ride together is COST-ordered by default: each
+round admits the oldest queued request (aging — no starvation), then
+fills the remaining free slots alternating the lightest and heaviest
+pending by tile count (tri(ceil(S / block)), the packed cost model), so
+successive packed rounds equalize total tiles; admit_order="fifo"
+restores strict arrival order. The chosen order is exposed per round in
+stats["admit_order_log"] / ["admit_round_tiles"]. Architectures with recurrent token mixers (mamba/rwkv) fall back to
 the sequential per-token prefill: their state is not splice-able across a
 packed concatenation.
 
@@ -29,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import mapping as M
 from repro.models import model as MD
 from repro.serve import decode as D
 
@@ -50,7 +57,8 @@ class Engine:
                  seed: int = 0, prefill_mode: str = "packed",
                  prefill_block: int = 16, prefill_impl: str = "scan",
                  prefill_bucket: int = 0, decode_mode: str = "auto",
-                 decode_block: int = 16, decode_impl: str = "scan"):
+                 decode_block: int = 16, decode_impl: str = "scan",
+                 admit_order: str = "cost"):
         self.params, self.cfg = params, cfg
         self.B, self.max_len = slots, max_len
         self.cache = MD.init_cache(cfg, slots, max_len, cache_dtype)
@@ -95,11 +103,21 @@ class Engine:
         while self.s_cache % blk:
             blk //= 2
         self.decode_block = blk
+        # cost-model-driven admission: order the queue by per-request
+        # prefill tile count (tri(n_r) — the packed launch's exact cost
+        # model) so successive packed rounds equalize total tiles instead
+        # of inheriting arrival-order lumps; "fifo" keeps strict arrival
+        # order. The chosen order is exposed per round in stats.
+        assert admit_order in ("cost", "fifo")
+        self.admit_order = admit_order
         # observability: ONE packed launch per admit round (prefill) and
         # per decode round; prefill vs decode launches counted apart, plus
         # per-round tile accounting for the packed-vs-padded claim.
+        # admit_order_log[r] is round r's admitted (uid, tiles) pairs in
+        # launch order; admit_round_tiles[r] its packed tile total.
         self.stats = {"prefill_launches": 0, "prefill_requests": 0,
                       "prefill_tokens": 0, "admit_rounds": 0,
+                      "admit_order_log": [], "admit_round_tiles": [],
                       "decode_rounds": 0, "decode_packed_launches": 0,
                       "decode_lockstep_launches": 0,
                       "decode_tiles_packed": 0, "decode_tiles_padded": 0}
@@ -181,14 +199,53 @@ class Engine:
             self.slot_req[slot] = req
             self.remaining[slot] = req.max_new
 
+    def _prefill_tiles(self, req: Request) -> int:
+        """Packed-prefill cost model for one request: tri(ceil(S / block))
+        — exactly the blocks its member contributes to the admit round's
+        packed grid (core/packing: num_blocks is the sum of member
+        triangles)."""
+        return M.tri(-(-len(req.prompt) // self.prefill_block))
+
+    def _pick_requests(self, take: int) -> List[Request]:
+        """Pop ``take`` queued requests for this admit round.
+
+        "cost": the OLDEST queued request always rides (aging guarantee —
+        every admit round retires the head of the queue, so no request is
+        starved however its tile count sits between the ends), then the
+        remaining slots alternate the lightest / heaviest pending so each
+        packed round's total tiles lands near the queue mean — successive
+        rounds equalize instead of inheriting arrival-order lumps (one
+        round all-long, the next all-short). Ties keep arrival order.
+        "fifo": strict arrival order.
+        """
+        if self.admit_order != "cost":
+            return [self.queue.pop(0) for _ in range(take)]
+        tiles = [self._prefill_tiles(r) for r in self.queue]
+        heavy = iter(sorted(range(len(tiles)), key=lambda i: (-tiles[i], i)))
+        light = iter(sorted(range(len(tiles)), key=lambda i: (tiles[i], i)))
+        picked, used = [0], {0}  # aging: head of queue always admitted
+        for t in range(take - 1):
+            ends = light if t % 2 == 0 else heavy
+            i = next(j for j in ends if j not in used)
+            picked.append(i)
+            used.add(i)
+        reqs = [self.queue[i] for i in picked]
+        for i in sorted(picked, reverse=True):
+            self.queue.pop(i)
+        return reqs
+
     def _admit(self):
-        pairs = []
-        for slot in range(self.B):
-            if self.slot_req[slot] is None and self.queue:
-                pairs.append((slot, self.queue.pop(0)))
-        if not pairs:
+        free = [s for s in range(self.B) if self.slot_req[s] is None]
+        take = min(len(free), len(self.queue))
+        if not take:
             return
+        reqs = self._pick_requests(take)
+        pairs = list(zip(free, reqs))
         self.stats["admit_rounds"] += 1
+        self.stats["admit_order_log"].append(
+            [(r.uid, self._prefill_tiles(r)) for r in reqs])
+        self.stats["admit_round_tiles"].append(
+            sum(self._prefill_tiles(r) for r in reqs))
         if self.prefill_mode == "packed":
             self._admit_batch(pairs)
         else:

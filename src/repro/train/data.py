@@ -20,6 +20,20 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def _zipf_tokens(rng: np.random.Generator, vocab: int, b: int,
+                 n: int) -> np.ndarray:
+    """(b, n) Zipf-ish unigram draw with short Markov repeats (shared by
+    the rectangular and packed-document factories). Both slices have
+    (n - 9)//8 + 1 elements for every n, so the copy is length-safe."""
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    probs = 1.0 / ranks
+    probs /= probs.sum()
+    toks = rng.choice(vocab, size=(b, n), p=probs).astype(np.int32)
+    if n >= 13:  # short deterministic repeats: every 8th position copies -4
+        toks[:, 8::8] = toks[:, 4:-4:8]
+    return toks
+
+
 class SyntheticLM:
     """Batch factory for one (cfg, shape) cell."""
 
@@ -33,15 +47,7 @@ class SyntheticLM:
             np.random.Philox(key=[self.seed, (0xB10C << 32) | step]))
 
     def _tokens(self, rng, b: int, s: int) -> np.ndarray:
-        v = self.cfg.vocab_size
-        # Zipf-ish unigram over the true vocab
-        ranks = np.arange(1, v + 1, dtype=np.float64)
-        probs = 1.0 / ranks
-        probs /= probs.sum()
-        toks = rng.choice(v, size=(b, s + 1), p=probs).astype(np.int32)
-        # short deterministic repeats: every 8th position copies pos-4
-        toks[:, 8::8] = toks[:, 4:-4:8] if s >= 12 else toks[:, 8::8]
-        return toks
+        return _zipf_tokens(rng, self.cfg.vocab_size, b, s + 1)
 
     def batch(self, step: int) -> dict:
         cfg, shape = self.cfg, self.shape
@@ -74,6 +80,108 @@ class SyntheticLM:
         toks = self._tokens(rng, b, s)
         return {"tokens": jnp.asarray(toks[:, :-1]),
                 "labels": jnp.asarray(toks[:, 1:])}
+
+
+# ---------------------------------------------------------------------------
+# Ragged document-batch training: bin packing onto the packed schedule
+# ---------------------------------------------------------------------------
+
+
+def pack_documents(doc_lens, capacity: int, *, block: int):
+    """First-fit-decreasing bin packing of documents into packed-row bins.
+
+    doc_lens[i] is document i's raw token count; each occupies
+    ceil(len / block) * block packed rows (its member triangle's padded
+    edge). Bins hold at most ``capacity`` padded tokens. Returns a list of
+    bins, each a list of doc indices in placement order (descending padded
+    length — FFD keeps the per-bin tile totals within 22% of optimal,
+    plenty for equalizing packed launches).
+    """
+    assert capacity >= block > 0
+    padded = [-(-int(s) // block) * block for s in doc_lens]
+    assert all(0 < p <= capacity for p in padded), (
+        f"documents must be 1..{capacity} padded tokens, got {padded}")
+    order = sorted(range(len(padded)), key=lambda i: -padded[i])
+    bins, fill = [], []
+    for i in order:
+        for b, used in enumerate(fill):
+            if used + padded[i] <= capacity:
+                bins[b].append(i)
+                fill[b] += padded[i]
+                break
+        else:
+            bins.append([i])
+            fill.append(padded[i])
+    return bins
+
+
+class PackedDocsLM:
+    """Ragged-document batch factory for packed triangular training.
+
+    ``doc_lens`` fixes the batch GEOMETRY (one compile for every step of
+    the run): each step re-draws token VALUES deterministically per
+    (seed, step), exactly like SyntheticLM. Emits one packed row per
+    batch — tokens (1, S_total) with the documents concatenated (each
+    zero-padded to a ``block`` multiple), labels shifted WITHIN each
+    document, mask zero on pad rows, positions restarting per document —
+    plus ``member_lens`` for ops.make_packed_sched. ``padded_batch``
+    builds the pad-to-max baseline over the SAME documents (the
+    bounding-box training batch the packed path replaces), so the two
+    losses are directly comparable: both average over the identical real
+    token set.
+    """
+
+    def __init__(self, cfg, doc_lens, *, block: int, seed: int = 0):
+        self.cfg, self.seed, self.block = cfg, seed, block
+        self.doc_lens = tuple(int(s) for s in doc_lens)
+        assert all(s >= 2 for s in self.doc_lens), (
+            "documents need >= 2 tokens for a next-token target")
+        self.pads = tuple(-(-s // block) * block for s in self.doc_lens)
+        self.starts = tuple(np.cumsum((0,) + self.pads[:-1]).tolist())
+        self.s_total = sum(self.pads)
+
+    @property
+    def member_lens(self):
+        """Padded per-document lengths — feed to ops.make_packed_sched."""
+        return self.pads
+
+    def _rng(self, step: int) -> np.random.Generator:
+        return np.random.Generator(
+            np.random.Philox(key=[self.seed, (0xD0C5 << 32) | step]))
+
+    def _docs(self, step: int):
+        """Per-document (len + 1)-token draws for one step."""
+        rng = self._rng(step)
+        return [_zipf_tokens(rng, self.cfg.vocab_size, 1, s + 1)[0]
+                for s in self.doc_lens]
+
+    def batch(self, step: int) -> dict:
+        toks = np.zeros((1, self.s_total), np.int32)
+        labels = np.zeros((1, self.s_total), np.int32)
+        mask = np.zeros((1, self.s_total), np.float32)
+        positions = np.zeros((1, self.s_total), np.int32)
+        for st, pad, s, doc in zip(self.starts, self.pads, self.doc_lens,
+                                   self._docs(step)):
+            toks[0, st:st + s] = doc[:-1]
+            labels[0, st:st + s] = doc[1:]
+            mask[0, st:st + s] = 1.0
+            positions[0, st:st + pad] = np.arange(pad)
+        return {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels),
+                "mask": jnp.asarray(mask),
+                "positions": jnp.asarray(positions)}
+
+    def padded_batch(self, step: int) -> dict:
+        """Pad-to-max baseline: (R, S_max) rows over the same documents."""
+        r, s_max = len(self.doc_lens), max(self.pads)
+        toks = np.zeros((r, s_max), np.int32)
+        labels = np.zeros((r, s_max), np.int32)
+        mask = np.zeros((r, s_max), np.float32)
+        for row, (s, doc) in enumerate(zip(self.doc_lens, self._docs(step))):
+            toks[row, :s] = doc[:-1]
+            labels[row, :s] = doc[1:]
+            mask[row, :s] = 1.0
+        return {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels),
+                "mask": jnp.asarray(mask)}
 
 
 def place(batch: dict, shardings: Optional[dict] = None) -> dict:

@@ -45,7 +45,8 @@ def init_state(key, cfg, opt: OPT.OptConfig, *, compression: bool = False):
 def make_train_step(cfg, opt: OPT.OptConfig, *, microbatches: int = 1,
                     attn_impl: str = "scan", remat: bool = True,
                     aux_weight: float = 0.01, block: int = 512,
-                    compressed_allreduce=None, act_sharding=None):
+                    compressed_allreduce=None, act_sharding=None,
+                    packed=None):
     """Returns train_step(state, batch) -> (state, metrics).
 
     microbatches M > 1 splits the global batch's leading dim into M
@@ -53,12 +54,16 @@ def make_train_step(cfg, opt: OPT.OptConfig, *, microbatches: int = 1,
     compressed_allreduce: optional (grads, err) -> (grads, err) hook from
     parallel/compression.make_compressed_allreduce.
     act_sharding: NamedSharding for the layer-scan activation carry.
+    packed: optional PackedTriSched — ragged document-batch training over
+    the packed layout (train/data.pack_documents builds the batches; the
+    schedule is static, so one program serves every step of that packing).
+    Batches must then carry "positions" and "mask" alongside tokens/labels.
     """
 
     def loss_fn(params, mb):
         return MD.loss_fn(params, cfg, mb, attn_impl=attn_impl, remat=remat,
                           aux_weight=aux_weight, block=block,
-                          act_sharding=act_sharding)
+                          act_sharding=act_sharding, packed=packed)
 
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 

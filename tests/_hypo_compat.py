@@ -12,7 +12,7 @@ strategies — a crude, shrink-less nod to hypothesis's edge-case bias), and
 supports the subset of the API this suite uses:
 
   given, settings (decorator + register_profile/load_profile), HealthCheck,
-  st.integers, st.floats, st.lists, st.data.
+  st.integers, st.floats, st.lists, st.sampled_from, st.data.
 
 It is NOT hypothesis: no shrinking, no database, no stateful testing. It
 exists so the tier-1 suite keeps its property coverage offline instead of
@@ -66,6 +66,13 @@ def _floats(min_value=None, max_value=None, allow_nan=True,
         return v
 
     return _Strategy(draw, boundaries=(lo, hi))
+
+
+def _sampled_from(elements):
+    elements = list(elements)
+    # first/last as crude boundaries, mirroring the integer strategy
+    bnd = (elements[0], elements[-1]) if elements else ()
+    return _Strategy(lambda rng: rng.choice(elements), boundaries=bnd)
 
 
 def _lists(elements, min_size=0, max_size=None, **_kw):
@@ -171,6 +178,7 @@ def install() -> bool:
     st.integers = _integers
     st.floats = _floats
     st.lists = _lists
+    st.sampled_from = _sampled_from
     st.data = _data
 
     mod = types.ModuleType("hypothesis")

@@ -8,7 +8,9 @@ so "how close is close enough" is decided once per (domain, dtype) pair
 instead of re-invented per test file.
 
 Imported by test_kernels_tri_attn.py, test_kernels_tri_edm.py,
-test_kernels_tri_3body.py, test_packing.py, and test_decode_packed.py.
+test_kernels_tri_3body.py, test_packing.py, test_decode_packed.py, and
+test_packed_backward.py (the f64 VJP oracles for causal + packed
+attention).
 """
 
 from __future__ import annotations
@@ -137,6 +139,73 @@ def attention_oracle(q, k, v, *, sm_scale=None, window=None, prefix: int = 0,
     p = np.exp(s - m)
     out = np.einsum("bhqk,bhkd->bhqd", p, v) / p.sum(axis=-1, keepdims=True)
     return out.astype(np.float32)
+
+
+def attention_grad_oracle(q, k, v, do, *, sm_scale=None, window=None,
+                          prefix: int = 0):
+    """Numpy float64 VJP of full-softmax MHA — the gradient oracle the
+    custom-VJP kernels (per-domain AND packed) are diffed against.
+
+    q, do: (B, H, S, D); k, v: (B, Hkv, S, D). Returns (dq, dk, dv)
+    float32 with dk/dv group-summed back to the kv-head count, matching
+    the kernels' GQA convention. Algorithm: explicit softmax Jacobian
+    (ds = p * (dp - delta)) on the full S x S score matrix — deliberately
+    NOT the flash-style streamed recomputation, so a reassociation bug in
+    the kernels cannot agree with itself.
+    """
+    q = np.asarray(q, np.float64)
+    k = np.asarray(k, np.float64)
+    v = np.asarray(v, np.float64)
+    do = np.asarray(do, np.float64)
+    b, h, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    g = h // hkv
+    kr = np.repeat(k, g, axis=1) if g > 1 else k
+    vr = np.repeat(v, g, axis=1) if g > 1 else v
+    scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+    s = np.einsum("bhqd,bhkd->bhqk", q, kr) * scale
+    mask = attention_mask_np(sq, sk, window=window, prefix=prefix)
+    s = np.where(mask[None, None], s, -np.inf)
+    m = s.max(axis=-1, keepdims=True)
+    e = np.exp(s - m)
+    p = e / e.sum(axis=-1, keepdims=True)
+    dv_h = np.einsum("bhqk,bhqd->bhkd", p, do)
+    dp = np.einsum("bhqd,bhkd->bhqk", do, vr)
+    delta = np.sum(p * dp, axis=-1, keepdims=True)
+    ds = p * (dp - delta) * scale
+    dq = np.einsum("bhqk,bhkd->bhqd", ds, kr)
+    dk_h = np.einsum("bhqk,bhqd->bhkd", ds, q)
+    if g > 1:
+        dk_h = dk_h.reshape(b, hkv, g, sk, d).sum(axis=2)
+        dv_h = dv_h.reshape(b, hkv, g, sk, d).sum(axis=2)
+    return (dq.astype(np.float32), dk_h.astype(np.float32),
+            dv_h.astype(np.float32))
+
+
+def packed_attention_grad_oracle(q, k, v, do, member_lens, *, windows=None,
+                                 prefixes=None, sm_scale=None):
+    """Gradient oracle for the PACKED ragged layout: each member's segment
+    of the concatenated operands is differentiated in ISOLATION (the
+    per-document sequential reference) and the pieces are concatenated
+    back. member_lens are the padded per-member token counts summing to S;
+    windows / prefixes are per-member (None / 0 = plain causal)."""
+    r = len(member_lens)
+    windows = windows or (None,) * r
+    prefixes = prefixes or (0,) * r
+    dqs, dks, dvs = [], [], []
+    base = 0
+    for s_r, w, p in zip(member_lens, windows, prefixes):
+        seg = slice(base, base + s_r)
+        dq, dk, dv = attention_grad_oracle(
+            np.asarray(q)[:, :, seg], np.asarray(k)[:, :, seg],
+            np.asarray(v)[:, :, seg], np.asarray(do)[:, :, seg],
+            sm_scale=sm_scale, window=w, prefix=p)
+        dqs.append(dq)
+        dks.append(dk)
+        dvs.append(dv)
+        base += s_r
+    return (np.concatenate(dqs, axis=2), np.concatenate(dks, axis=2),
+            np.concatenate(dvs, axis=2))
 
 
 def decode_round_oracle(q, k_cache, v_cache, kv_lens) -> np.ndarray:

@@ -106,17 +106,76 @@ def test_capacity_padding_is_inert():
 def test_decode_table_layout():
     tbl, needed = OPS.make_decode_table([9, 1, 16], [0, 1, 3], blk=4,
                                         n_members=6, n_slots=5)
-    assert tbl.shape == (4, 6)
+    assert tbl.shape == (5, 6)
     np.testing.assert_array_equal(tbl[0], [0, 3, 4, 8, 8, 8])  # starts
     np.testing.assert_array_equal(tbl[1, :4], [0, 1, 3, 0])    # slots
     np.testing.assert_array_equal(tbl[2, :4], [3, 1, 4, 0])    # kv_tiles
     np.testing.assert_array_equal(tbl[3], [9, 1, 16, 0, 0, 0])  # kv_len
+    np.testing.assert_array_equal(tbl[4], 0)  # unbanded: whole prefix
     assert tbl[1, 5] == 5 and tbl[2, 5] == OPS.DECODE_NO_EMIT
     assert needed == 8
     # the table IS core/packing's decode_round: same offsets
     pk = PackedSchedule.decode_round([3, 1, 4])
     assert tuple(tbl[0, :3]) == pk.offsets[:-1]
     assert pk.num_blocks == needed
+
+
+def test_banded_decode_table_layout_and_tile_cap():
+    """window=w trims each member to its LAST w tokens: kv_first row set,
+    per-slot kv_tiles capped at ceil(w / blk) (+1 when kv_len is not
+    tile-aligned), however deep the position."""
+    from repro.serve import decode as D
+
+    w, blk = 8, 4
+    tbl, needed = D.make_decode_table([64, 9, 3], [0, 1, 2], blk=blk,
+                                      n_members=5, n_slots=4, s_cache=64,
+                                      window=w)
+    assert tbl.shape == (5, 5)
+    np.testing.assert_array_equal(tbl[3, :3], [64, 9, 3])      # kv_len
+    np.testing.assert_array_equal(tbl[4, :3], [56, 1, 0])      # kv_first
+    np.testing.assert_array_equal(tbl[2, :3], [2, 3, 1])       # kv_tiles
+    assert needed == 6  # vs 16 + 3 + 1 unbanded
+    cap = -(-w // blk) + 1
+    assert max(tbl[2, :3]) <= cap
+    # per-slot windows
+    tbl2, _ = D.make_decode_table([64, 64], [0, 1], blk=blk, n_members=3,
+                                  n_slots=2, window=[4, None])
+    np.testing.assert_array_equal(tbl2[2, :2], [1, 16])
+    with pytest.raises(AssertionError, match="window list"):
+        D.make_decode_table([8, 8], [0, 1], blk=blk, n_members=3,
+                            n_slots=2, window=[4])
+
+
+@pytest.mark.parametrize("impl", ["scan", "pallas", "ref"])
+def test_banded_decode_round_token_identical(impl):
+    """Band-limited members equal the full-prefix WINDOWED oracle: the
+    trimmed head tiles were entirely outside the window, so the packed
+    banded round loses no information (token identity of the satellite)."""
+    from repro.serve import decode as D
+
+    b, blk, s_cache, w = 4, 8, 64, 16
+    kv_lens, slots = [61, 17, 9], [0, 1, 3]
+    q, kc, vc = O.rand_decode_state(7, b, 4, 2, s_cache, 8)
+    tbl, needed = D.make_decode_table(kv_lens, slots, blk=blk,
+                                      n_members=b + 1, n_slots=b,
+                                      s_cache=s_cache, window=w)
+    cap = D.round_capacity(needed)
+    want = np.zeros((b, 4, 8), np.float32)
+    for kl, sl in zip(kv_lens, slots):
+        o = O.attention_oracle(
+            np.asarray(q[sl])[None, :, None, :],
+            np.asarray(kc[sl, :kl]).transpose(1, 0, 2)[None],
+            np.asarray(vc[sl, :kl]).transpose(1, 0, 2)[None],
+            window=w, q_offset=kl - 1)
+        want[sl] = o[0, :, 0, :]
+    spec = OPS.DecodeRoundSpec(n_members=b + 1, capacity=cap, blk=blk,
+                               impl=impl)
+    got = OPS.packed_decode_attention(q, kc, vc, jnp.asarray(tbl), spec)
+    O.assert_close(got, want, "attn", err_msg=f"banded {impl}")
+    # and the band actually trimmed tiles vs the unbanded round
+    _, full = OPS.make_decode_table(kv_lens, slots, blk=blk,
+                                    n_members=b + 1, n_slots=b)
+    assert needed < full
 
 
 def test_decode_table_rejects_overfull_and_empty():

@@ -89,6 +89,39 @@ def test_engine_packed_prefill_matches_sequential():
             == st_packed["decode_rounds"])
 
 
+def test_engine_cost_ordered_admission_equalizes_rounds():
+    """admit_order="cost" (default) admits the oldest request each round
+    (aging), then alternates light/heavy so successive packed admit
+    rounds get near-equal tile totals; "fifo" keeps arrival order. Token
+    streams stay identical per uid either way, and the chosen order is
+    exposed in stats."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(11)
+    # arrival order deliberately lumpy: two long then two short prompts
+    lens = (17, 16, 2, 3)
+    prompts = [rng.integers(1, cfg.vocab_size, size=s).astype(np.int32)
+               for s in lens]
+
+    def run(order):
+        eng = Engine(params, cfg, slots=2, max_len=48, temperature=0.0,
+                     prefill_block=4, admit_order=order)
+        for uid, p in enumerate(prompts):
+            eng.submit(p, max_new=4, uid=uid)
+        return eng.run(), eng.stats
+
+    res_cost, st_cost = run("cost")
+    res_fifo, st_fifo = run("fifo")
+    assert res_cost == res_fifo  # ordering never changes any token stream
+    assert st_fifo["admit_round_tiles"] == [15 + 10, 1 + 1]  # lumpy
+    assert st_cost["admit_round_tiles"] == [15 + 1, 10 + 1]  # equalized
+    spread = lambda ts: max(ts) - min(ts)
+    assert spread(st_cost["admit_round_tiles"]) < \
+        spread(st_fifo["admit_round_tiles"])
+    # the per-round order log names (uid, tiles) in launch order
+    assert st_cost["admit_order_log"][0] == [(0, 15), (2, 1)]
+    assert st_fifo["admit_order_log"][0] == [(0, 15), (1, 10)]
+
+
 def test_engine_recurrent_arch_falls_back_to_sequential():
     """Recurrent token mixers cannot splice packed state across request
     boundaries; the engine must silently keep the sequential path."""
