@@ -20,6 +20,7 @@ scripts/check.sh runs it so the benchmark scripts cannot rot offline.
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import time
 
@@ -127,6 +128,21 @@ def main(argv=None):
     else:
         print("  no dry-run artifacts yet "
               "(run: python -m repro.launch.dryrun --all --mesh both)")
+
+    print("=" * 72)
+    print("contract lint (static invariants backing the numbers above)")
+    print("=" * 72)
+    lint_path = "artifacts/lint_report.json"
+    if os.path.exists(lint_path):
+        with open(lint_path) as f:
+            rep = json.load(f)
+        per = ", ".join(f"{k}={v['checks'] - v['failures']}/{v['checks']}"
+                        for k, v in rep["passes"].items())
+        print(f"  {rep['total_checks']} checks, "
+              f"{rep['total_failures']} failures ({per})")
+    else:
+        print("  no lint report yet "
+              "(run: python -m repro.analysis.lint --json)")
     print(f"\nall benchmarks done in {time.time()-t0:.1f}s")
 
 

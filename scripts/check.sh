@@ -11,6 +11,15 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src:scripts${PYTHONPATH:+:$PYTHONPATH}"
 
+# Static contract lint tier: envelope certification, schedule contract
+# proofs, jaxpr/HLO structural rules (see src/repro/analysis/README.md).
+# Gating and fully offline — nothing executes a kernel. Skipped when
+# pytest args are forwarded so `scripts/check.sh -k foo` stays fast.
+if [ "$#" -eq 0 ]; then
+    echo "== contract lint =="
+    python -m repro.analysis.lint -q --json artifacts/lint_report.json
+fi
+
 # -p _offline_guard turns any outbound connection attempt into a failure,
 # so offline-collectability cannot regress silently.
 python -m pytest -x -q -p _offline_guard "$@"

@@ -1,0 +1,18 @@
+"""Static block-space contract checker.
+
+Three passes, none of which execute a kernel:
+
+  envelope    certify the int32 envelopes of the traced isqrt/cbrt maps
+              from derived float32 error bounds (repro.analysis.envelope)
+  contracts   prove every registered schedule's declared contract —
+              counting, partition, boundary probes, inverse round-trips,
+              traced equivalence — at n up to 10^4
+              (repro.analysis.contracts + repro.analysis.verifier)
+  jaxpr       structural lint of every public op's jaxpr/HLO: exact
+              pallas_call counts, scalar-prefetch table ABI, capacity
+              bucketing, dtype hygiene (repro.analysis.jaxpr_lint)
+
+Run with ``python -m repro.analysis.lint`` (add ``--json`` for
+``artifacts/lint_report.json``). Wired into scripts/check.sh as a gating
+tier ahead of pytest.
+"""

@@ -1,0 +1,101 @@
+"""Block-space contract checker CLI.
+
+    PYTHONPATH=src python -m repro.analysis.lint [--json PATH] [--pass NAME]
+
+Runs the three static passes (envelope, contracts, jaxpr), prints one line
+per check, and exits nonzero if any check fails. ``--json`` writes the full
+report (default path artifacts/lint_report.json when given without a
+value). Entirely offline: nothing here executes a kernel — mapping math
+runs on host ints, traced maps run as eager jnp scalar code, and ops are
+only abstractly traced / compiled-to-text.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+from typing import List
+
+from repro.analysis.contracts import CheckResult
+
+_PASSES = ("envelope", "contracts", "jaxpr")
+
+
+def run_pass(name: str) -> List[CheckResult]:
+    if name == "envelope":
+        from repro.analysis import envelope as mod
+    elif name == "contracts":
+        from repro.analysis import verifier as mod
+    elif name == "jaxpr":
+        from repro.analysis import jaxpr_lint as mod
+    else:
+        raise SystemExit(f"unknown pass {name!r}; choose from {_PASSES}")
+    return mod.run()
+
+
+def run_all(passes=_PASSES) -> List[CheckResult]:
+    out: List[CheckResult] = []
+    for name in passes:
+        out.extend(run_pass(name))
+    return out
+
+
+def report(results: List[CheckResult], *, verbose: bool = True) -> dict:
+    by_pass: dict = {}
+    for r in results:
+        by_pass.setdefault(r.pass_name, []).append(r)
+    failures = [r for r in results if not r.ok]
+    if verbose:
+        for name, rs in by_pass.items():
+            n_fail = sum(not r.ok for r in rs)
+            print(f"[{name}] {len(rs) - n_fail}/{len(rs)} checks passed")
+            for r in rs:
+                mark = "  ok " if r.ok else "  FAIL"
+                print(f"{mark} {r.rule}: {r.detail}")
+    return {
+        "passes": {name: {"checks": len(rs),
+                          "failures": sum(not r.ok for r in rs)}
+                   for name, rs in by_pass.items()},
+        "total_checks": len(results),
+        "total_failures": len(failures),
+        "results": [r.as_dict() for r in results],
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="static block-space contract checker")
+    ap.add_argument("--json", nargs="?", const="artifacts/lint_report.json",
+                    default=None, metavar="PATH",
+                    help="write the full report as JSON "
+                         "(default artifacts/lint_report.json)")
+    ap.add_argument("--pass", dest="only", choices=_PASSES, default=None,
+                    help="run a single pass instead of all three")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="only print the summary line")
+    args = ap.parse_args(argv)
+
+    t0 = time.time()
+    results = run_all((args.only,) if args.only else _PASSES)
+    rep = report(results, verbose=not args.quiet)
+    rep["elapsed_s"] = round(time.time() - t0, 2)
+
+    if args.json:
+        path = pathlib.Path(args.json)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(rep, indent=2) + "\n")
+        print(f"report written to {path}")
+
+    ok = rep["total_failures"] == 0
+    print(f"lint: {rep['total_checks']} checks, "
+          f"{rep['total_failures']} failures, {rep['elapsed_s']}s "
+          f"-> {'OK' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

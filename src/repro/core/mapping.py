@@ -16,9 +16,13 @@ linear block index in ``[0, T)`` enumerated row-major: ``lam = i(i+1)/2 + j``.
 
 Exactness: the paper's LTM-R uses ``x*rsqrtf(x) + eps`` and is exact only for
 ``N < 30,720``. On TPU the map runs once per grid step on the scalar core, so
-we use float sqrt followed by <=2 integer corrections (the paper's own
-"e <= 1 fixable by conditionals" observation), which is exact for all
-``lam < 2**52`` host-side and ``lam < 2**31`` traced (int32 grid indices).
+we use float sqrt followed by integer corrections (the paper's own
+"e <= 1 fixable by conditionals" observation) with overflow-clamped probes.
+The traced envelopes are DECLARED as named module constants below
+(``ISQRT_TRACED_MAX_X``, ``LTM_TRACED_MAX_LAM``, ``TET_TRACED_MAX_LAM``, ...)
+and CERTIFIED against derived float-error bounds by
+``repro.analysis.envelope`` — do not restate the numbers in prose; import
+the constants. Host ints are exact unboundedly (math.isqrt / python ints).
 
 The 2D/3D map zoo
 -----------------
@@ -38,11 +42,12 @@ Competitors at block level: ``utm_map`` (Avril), ``rb_map`` (Jung fold),
 ``rec_schedule`` (Ries recursive), ``bb_map`` (bounding box).
 
 The 3D row-finder uses the same repair pattern as ``_isqrt_traced``: a
-float32 ``cbrt`` candidate followed by <=2 integer corrections in each
-direction (overflow-clamped probes). Traced exactness envelope: int32
-intermediates of ``tet(i) = tri(i)*(i+2)/3`` fit below 2**31 for
-``i <= 1624``, so the map is exact for planes ``i <= 1623``
-(``lam < tet(1624) ~ 7.15e8``); host ints are exact unboundedly.
+float32 ``cbrt`` candidate followed by ``TET_PROBES_UP``/``TET_PROBES_DOWN``
+integer corrections (overflow-clamped probes). Traced exactness envelope:
+int32 intermediates of ``tet(i) = tri(i)*(i+2)/3`` fit below 2**31 for
+``i <= TET_TRACED_MAX_I``, so the map is exact for planes
+``i <= TET_TRACED_EXACT_PLANES`` (``lam <= TET_TRACED_MAX_LAM``); host ints
+are exact unboundedly.
 """
 
 from __future__ import annotations
@@ -101,7 +106,7 @@ def tet(i):
     Computed as (tri(i) * (i+2)) // 3 — each division is exact (i(i+1)/2 is
     an integer; i(i+1)(i+2)/2 is divisible by 3 since one of three
     consecutive integers is) and the int32 intermediate tri(i)*(i+2) stays
-    below 2**31 for i <= 1624, the traced exactness envelope.
+    below 2**31 for i <= TET_TRACED_MAX_I, the traced exactness envelope.
     """
     return (tri(i) * (i + 2)) // 3
 
@@ -126,6 +131,55 @@ def wasted_blocks_bb3(n: int) -> int:
 
 
 # ---------------------------------------------------------------------------
+# Traced-exactness envelopes — DECLARED here, CERTIFIED by repro.analysis
+# ---------------------------------------------------------------------------
+#
+# Single source of truth for every "exact up to ..." claim in this module.
+# The static verifier (repro.analysis.envelope) re-derives each bound from
+# float32 error analysis of the correction-probe logic and fails the lint
+# tier if a declared constant drifts from the derived one, so edits to the
+# probe code below must keep these in sync (the checker tells you how).
+
+INT32_MAX = 2**31 - 1
+
+# floor(sqrt(INT32_MAX)): the largest root whose square fits int32.
+# Correction probes clamp at this value so the repair itself cannot
+# overflow (probing (r+1)^2 for r = 46340 would wrap negative and accept
+# a too-large root — the failure mode the clamp exists to prevent).
+ISQRT_MAX_R = 46340
+
+# Integer correction probes applied in each direction after the float32
+# sqrt candidate. The float error bound derived by the verifier is < 1,
+# so one probe each way suffices.
+ISQRT_PROBES = 1
+
+# _isqrt_traced(x) == floor(sqrt(x)) for all 0 <= x <= ISQRT_TRACED_MAX_X.
+ISQRT_TRACED_MAX_X = INT32_MAX
+
+# ltm_map computes 8*lam + 1 in the index dtype; int32 caps lam here.
+# Largest exactly-mapped traced lambda and the row it lands in.
+LTM_TRACED_MAX_LAM = (INT32_MAX - 1) // 8  # 268,435,455
+LTM_TRACED_MAX_I = 23169  # row of LTM_TRACED_MAX_LAM
+
+# 3D row-finder: float32 cbrt candidate error spans [-1, +2] relative to
+# the true plane (real-arithmetic candidate sits in [i, i+1]; float
+# rounding adds at most one more either way), so two probes up and two
+# down repair it with margin.
+TET_PROBES_UP = 2
+TET_PROBES_DOWN = 2
+
+# Largest argument whose tet() int32 intermediate tri(i)*(i+2) fits in
+# 2**31. Correction probes clamp here, so the traced map is exact for
+# planes i <= TET_TRACED_EXACT_PLANES, i.e. lam <= TET_TRACED_MAX_LAM.
+TET_TRACED_MAX_I = 1624
+TET_TRACED_EXACT_PLANES = TET_TRACED_MAX_I - 1  # 1623
+TET_TRACED_MAX_LAM = tet(TET_TRACED_MAX_I) - 1  # 715,168,999
+
+# Kept for callers that predate the public names.
+_TET_TRACED_MAX_I = TET_TRACED_MAX_I
+
+
+# ---------------------------------------------------------------------------
 # Exact integer sqrt usable in traced code
 # ---------------------------------------------------------------------------
 
@@ -133,15 +187,23 @@ def wasted_blocks_bb3(n: int) -> int:
 def _isqrt_traced(x: Array) -> Array:
     """floor(sqrt(x)) for non-negative int32/int64 scalars, traced.
 
-    float32 sqrt gives a candidate with error <= 1 for x < 2**31 (paper's
-    observation); two where-corrections make it exact. Branch-free on the
-    TPU scalar core.
+    float32 sqrt gives a candidate within +-1 of the true root over the
+    whole int32 range (paper's observation); ISQRT_PROBES where-corrections
+    in each direction make it exact. Branch-free on the TPU scalar core.
+    Probes are overflow-clamped at ISQRT_MAX_R: without the clamp,
+    (r+1)^2 wraps negative for r >= ISQRT_MAX_R and the up-probe accepts a
+    too-large root, which is exactly what happened for
+    x >= 2,147,395,599 before the clamp existed.
     """
     xf = x.astype(jnp.float32)
     r = jnp.floor(jnp.sqrt(xf)).astype(x.dtype)
+    r = jnp.minimum(r, ISQRT_MAX_R)
     # r may be off by one in either direction after float rounding.
-    r = jnp.where((r + 1) * (r + 1) <= x, r + 1, r)
-    r = jnp.where(r * r > x, r - 1, r)
+    for _ in range(ISQRT_PROBES):
+        up = jnp.minimum(r + 1, ISQRT_MAX_R)
+        r = jnp.where((up * up <= x) & (up == r + 1), r + 1, r)
+    for _ in range(ISQRT_PROBES):
+        r = jnp.where(r * r > x, r - 1, r)
     return r
 
 
@@ -225,29 +287,23 @@ def jax_rsqrt(x: Array) -> Array:
 # row-major contiguity.
 
 
-# Largest argument whose tet() int32 intermediate tri(i)*(i+2) fits in 2**31.
-# Correction probes clamp here, so the traced map is exact for planes
-# i <= 1623, i.e. lam < tet(1624) = 715,169,000.
-_TET_TRACED_MAX_I = 1624
-
-
 def _tet_row_traced(lam: Array) -> Array:
     """Largest i with tet(i) <= lam, traced (the 3D analogue of the sqrt
     row-finder).
 
-    float32 cbrt(6 lam) gives a candidate within +1 of the true plane over
-    the whole int32 envelope (measured exhaustively at plane boundaries up
-    to i = 1623); two branch-free corrections in each direction make it
-    exact with margin, mirroring ``_isqrt_traced``. Probe arguments are
-    clamped to _TET_TRACED_MAX_I so the repair itself cannot overflow.
+    float32 cbrt(6 lam) gives a candidate within [-1, +2] of the true plane
+    over the whole int32 envelope; TET_PROBES_UP/TET_PROBES_DOWN branch-free
+    corrections make it exact with margin, mirroring ``_isqrt_traced``.
+    Probe arguments are clamped to TET_TRACED_MAX_I so the repair itself
+    cannot overflow.
     """
-    probe = lambda x: tet(jnp.minimum(x, _TET_TRACED_MAX_I))
+    probe = lambda x: tet(jnp.minimum(x, TET_TRACED_MAX_I))
     c = jnp.floor(jnp.cbrt(6.0 * lam.astype(jnp.float32))).astype(lam.dtype)
-    c = jnp.where(probe(c + 1) <= lam, c + 1, c)
-    c = jnp.where(probe(c + 1) <= lam, c + 1, c)
-    c = jnp.where(probe(c) > lam, c - 1, c)
-    c = jnp.where(probe(c) > lam, c - 1, c)
-    return jnp.minimum(c, _TET_TRACED_MAX_I - 1)
+    for _ in range(TET_PROBES_UP):
+        c = jnp.where(probe(c + 1) <= lam, c + 1, c)
+    for _ in range(TET_PROBES_DOWN):
+        c = jnp.where(probe(c) > lam, c - 1, c)
+    return jnp.minimum(c, TET_TRACED_MAX_I - 1)
 
 
 def tet_map(lam):
@@ -255,8 +311,8 @@ def tet_map(lam):
 
     i = the unique plane with tet(i) <= lam < tet(i+1), found by
     integer-corrected cube root; (j, k) = g(lam - tet(i)) reuses the 2D map.
-    Exact: host unboundedly (python ints), traced for planes i <= 1623
-    (lam < tet(1624) ~ 7.15e8, int32).
+    Exact: host unboundedly (python ints), traced for planes
+    i <= TET_TRACED_EXACT_PLANES (lam <= TET_TRACED_MAX_LAM, int32).
     """
     if isinstance(lam, (int, np.integer)):
         lam = int(lam)

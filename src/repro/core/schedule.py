@@ -119,6 +119,11 @@ class TriangularSchedule(BlockSchedule):
         return self.num_blocks
 
     def index_map(self, lam):
+        # trace-time guard against the certified traced-isqrt envelope
+        # (constant derived + certified by repro.analysis.envelope)
+        assert self.num_blocks - 1 <= M.LTM_TRACED_MAX_LAM, (
+            f"n={self.n} launches {self.num_blocks} blocks, past the "
+            f"ltm_map int32 envelope (max lam {M.LTM_TRACED_MAX_LAM})")
         return M.ltm_map(lam) if self.include_diagonal else M.ltm_map_nodiag(lam)
 
     def host_map(self, lam: int):
@@ -152,6 +157,10 @@ class TetrahedralSchedule(BlockSchedule):
         return self.num_blocks
 
     def index_map(self, lam):
+        # trace-time guard against the certified traced-cbrt envelope
+        assert self.num_blocks - 1 <= M.TET_TRACED_MAX_LAM, (
+            f"n={self.n} launches {self.num_blocks} blocks, past the "
+            f"tet_map int32 envelope (max lam {M.TET_TRACED_MAX_LAM})")
         return M.tet_map(lam)
 
     def host_map(self, lam: int):

@@ -85,6 +85,11 @@ def three_body_tet(x, block: int, *, strict: bool = False,
     assert n_rows % block == 0
     n = n_rows // block
     t3 = M.tet(n)
+    # certified traced-cbrt envelope (repro.analysis.envelope derives it
+    # from float error bounds; lint fails if the constant drifts)
+    assert t3 - 1 <= M.TET_TRACED_MAX_LAM, (
+        f"grid {t3} exceeds the certified tet_map int32 envelope "
+        f"(max lam {M.TET_TRACED_MAX_LAM}); use a larger block")
     return pl.pallas_call(
         functools.partial(_tet_kernel, block=block, strict=strict),
         grid=(t3,),

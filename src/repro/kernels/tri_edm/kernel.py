@@ -52,6 +52,10 @@ def edm_ltm(x, block: int, *, squared: bool = False, interpret: bool = True):
     assert n_rows % block == 0
     n = n_rows // block
     t = M.tri(n)
+    # certified traced-isqrt envelope (see repro.analysis.envelope)
+    assert t - 1 <= M.LTM_TRACED_MAX_LAM, (
+        f"grid {t} exceeds the certified ltm_map int32 envelope "
+        f"(max lam {M.LTM_TRACED_MAX_LAM}); use a larger block")
     return pl.pallas_call(
         functools.partial(_ltm_kernel, squared=squared),
         grid=(t,),

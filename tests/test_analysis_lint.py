@@ -1,0 +1,172 @@
+"""Tests for the static block-space contract checker (repro.analysis).
+
+Pins the satellite invariants of the checker PR:
+  * the rb closed form in core/analysis.py vs the O(n^2) host_active loop,
+  * traced-vs-host boundary behaviour at the certified envelope edges
+    (tet planes 1622/1623/1624, the 2D row LTM_TRACED_MAX_I), including
+    the tightness witness just PAST each envelope,
+  * the trace-time guards that read the certified constants,
+  * the lint CLI failing when a declared contract is deliberately broken
+    (mutated probe count), and the --json report surface.
+"""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import analysis as A
+from repro.core import mapping as M
+from repro.core import schedule as S
+
+
+# ---------------------------------------------------------------------------
+# satellite (b): rb closed form == O(n^2) loop
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", list(range(1, 33)) + [63, 64, 128, 255, 256])
+def test_rb_closed_form_matches_host_active_loop(n):
+    """strategy_stats' rb useful count is closed-form tri(n); pin it to
+    the O(n^2) per-cell host_active loop it replaced."""
+    sched = S.RBSchedule(n=n)
+    h, w = M.rb_grid_shape(n)
+    loop = sum(1 for lam in range(h * w) if sched.host_active(lam))
+    st = A.strategy_stats(n)["rb"]
+    assert st.useful == loop == M.tri(n)
+    assert st.launched == h * w
+    assert st.wasted == h * w - M.tri(n)
+
+
+# ---------------------------------------------------------------------------
+# satellite (c): boundary behaviour at the certified envelopes
+# ---------------------------------------------------------------------------
+
+
+def _traced_tet(lam):
+    i, j, k = M.tet_map(jnp.asarray(lam, jnp.int32))
+    return (int(i), int(j), int(k))
+
+
+@pytest.mark.parametrize("i", [M.TET_TRACED_MAX_I - 2,
+                               M.TET_TRACED_MAX_I - 1,
+                               M.TET_TRACED_MAX_I])
+def test_tet_traced_vs_host_at_envelope_planes(i):
+    """tet_map traced == host at every lambda around planes 1622..1624
+    that is still inside the certified envelope."""
+    for lam in [M.tet(i) - 2, M.tet(i) - 1, M.tet(i), M.tet(i) + 1]:
+        if 0 <= lam <= M.TET_TRACED_MAX_LAM:
+            assert _traced_tet(lam) == M.tet_map(lam), lam
+
+
+def test_tet_envelope_is_tight():
+    """One past TET_TRACED_MAX_LAM the clamped probes can no longer reach
+    the true plane: the certified envelope is exact, not conservative."""
+    lam = M.TET_TRACED_MAX_LAM + 1  # == tet(TET_TRACED_MAX_I)
+    assert M.tet_map(lam) == (M.TET_TRACED_MAX_I, 0, 0)
+    assert _traced_tet(lam) != M.tet_map(lam)
+    assert _traced_tet(lam)[0] == M.TET_TRACED_MAX_I - 1  # clamp artifact
+
+
+def _traced_ltm(lam):
+    i, j = M.ltm_map(jnp.asarray(lam, jnp.int32))
+    return (int(i), int(j))
+
+
+def test_ltm_traced_vs_host_at_envelope_boundary():
+    """2D boundary: traced == host right up to LTM_TRACED_MAX_LAM
+    (the top of the certified int32 envelope, row LTM_TRACED_MAX_I),
+    including the last row's seams."""
+    top = M.LTM_TRACED_MAX_LAM
+    row0 = M.tri(M.LTM_TRACED_MAX_I)  # first lam of the last full row
+    for lam in [top, top - 1, row0, row0 - 1, row0 + 1]:
+        assert _traced_ltm(lam) == M.ltm_map(lam), lam
+    assert M.ltm_map(top)[0] == M.LTM_TRACED_MAX_I
+    # 8*lam + 1 is the binding int32 constraint: one past the envelope
+    # the traced discriminant overflows (envelope tight by construction)
+    assert 8 * (top + 1) + 1 > M.INT32_MAX
+
+
+def test_isqrt_traced_exact_across_int32_including_clamp_region():
+    """Regression for the probe-overflow bug: x near INT32_MAX used to
+    return 46341 because the up-probe (r+1)^2 wrapped negative."""
+    xs = []
+    for r in [1, 2, 46339, M.ISQRT_MAX_R]:
+        xs += [r * r - 1, r * r, r * r + 1]
+    xs += [M.INT32_MAX - 1, M.INT32_MAX]
+    xs = sorted({x for x in xs if 0 <= x <= M.INT32_MAX})
+    got = np.asarray(M._isqrt_traced(jnp.asarray(xs, jnp.int32)))
+    want = np.asarray([int(np.floor(np.sqrt(np.float64(x)))) for x in xs])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_trace_time_guards_read_certified_constants():
+    """Schedules refuse to trace past the certified envelopes."""
+    # largest legal row count, then one row too many
+    S.TriangularSchedule(n=M.LTM_TRACED_MAX_I).index_map(0)
+    with pytest.raises(AssertionError, match="envelope"):
+        S.TriangularSchedule(n=M.LTM_TRACED_MAX_I + 2).index_map(0)
+    S.TetrahedralSchedule(n=M.TET_TRACED_MAX_I).index_map(0)
+    with pytest.raises(AssertionError, match="envelope"):
+        S.TetrahedralSchedule(n=M.TET_TRACED_MAX_I + 1).index_map(0)
+
+
+# ---------------------------------------------------------------------------
+# the checker itself: green on the real repo, red on a broken contract
+# ---------------------------------------------------------------------------
+
+
+def test_envelope_pass_is_green():
+    from repro.analysis import envelope
+
+    results = envelope.run()
+    assert results and all(r.ok for r in results), \
+        [r.as_dict() for r in results if not r.ok]
+
+
+def test_lint_cli_fails_on_mutated_probe_count(monkeypatch, tmp_path,
+                                               capsys):
+    """Deliberately break a declared contract: drop the tet down-probe
+    count below the derived requirement (2). The envelope pass must
+    report the violation and the CLI must exit nonzero."""
+    from repro.analysis import lint
+
+    monkeypatch.setattr(M, "TET_PROBES_DOWN", 1)
+    report = tmp_path / "lint_report.json"
+    rc = lint.main(["--pass", "envelope", "-q", "--json", str(report)])
+    assert rc != 0
+    rep = json.loads(report.read_text())
+    assert rep["total_failures"] >= 1
+    bad_rules = {r["rule"] for r in rep["results"] if not r["ok"]}
+    assert any("tet" in r for r in bad_rules), bad_rules
+
+
+def test_lint_cli_json_report_green(tmp_path):
+    """Unmutated envelope pass: exit 0 and a well-formed JSON report."""
+    from repro.analysis import lint
+
+    report = tmp_path / "lint_report.json"
+    rc = lint.main(["--pass", "envelope", "-q", "--json", str(report)])
+    assert rc == 0
+    rep = json.loads(report.read_text())
+    assert rep["total_failures"] == 0
+    assert rep["passes"]["envelope"]["checks"] == rep["total_checks"] > 0
+    assert {"pass_name", "rule", "ok", "detail"} <= set(rep["results"][0])
+
+
+def test_contract_verifier_catches_wrong_closed_form():
+    """The verifier engine itself must notice a contract whose counting
+    closed form is off by one (meta-test: the proof is not vacuous)."""
+    from repro.analysis import contracts as C
+    from repro.analysis import verifier as V
+
+    con = C.schedule_contracts()["ltm"]
+    broken = C.ScheduleContract(
+        kind=con.kind, bijectivity=con.bijectivity, rank=con.rank,
+        make=con.make, launched=lambda case: con.launched(case) + 1,
+        domain=con.domain, segments=con.segments, in_domain=con.in_domain,
+        inverse=con.inverse, cases=con.cases[:1],
+        seg_active_count=con.seg_active_count, active_at=con.active_at)
+    results = V.verify_contract(broken)
+    assert any(not r.ok and "counting" in r.rule for r in results)

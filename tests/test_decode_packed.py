@@ -120,6 +120,31 @@ def test_decode_table_layout():
     assert pk.num_blocks == needed
 
 
+def test_decode_pad_member_declared_contract():
+    """The pad-member ABI is a declared contract (also enforced by
+    ``repro.analysis.jaxpr_lint``): the final column is exactly
+    (cur, n_slots, DECODE_NO_EMIT, 0, 0) — it owns the garbage output
+    row b and never emits — and DECODE_NO_EMIT is a fixed sentinel that
+    dominates any representable tile count so the lambda search can
+    never land past it."""
+    assert OPS.DECODE_NO_EMIT == 2 ** 30
+    for kv_lens, slots, n_members, n_slots in [
+            ([9, 1, 16], [0, 1, 3], 6, 5),
+            ([5], [2], 2, 4),
+            ([7, 7, 7], [0, 1, 2], 4, 3)]:
+        tbl, needed = OPS.make_decode_table(kv_lens, slots, blk=4,
+                                            n_members=n_members,
+                                            n_slots=n_slots)
+        assert tbl.shape == (5, n_members) and tbl.dtype == np.int32
+        pad = tuple(int(v) for v in tbl[:, -1])
+        assert pad == (needed, n_slots, OPS.DECODE_NO_EMIT, 0, 0)
+        # unused interior columns are zero-tile, never the pad sentinel
+        for j in range(len(kv_lens), n_members - 1):
+            assert tuple(int(v) for v in tbl[:, j]) == (needed, 0, 0, 0, 0)
+        # the sentinel dominates any real cumulative tile count by far
+        assert needed < OPS.DECODE_NO_EMIT // 2
+
+
 def test_banded_decode_table_layout_and_tile_cap():
     """window=w trims each member to its LAST w tokens: kv_first row set,
     per-slot kv_tiles capped at ceil(w / blk) (+1 when kv_len is not

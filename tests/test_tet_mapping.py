@@ -85,8 +85,11 @@ def test_tet_traced_matches_host_exhaustive(n):
 
 
 # Traced exactness envelope: tet() int32 intermediates fit for arguments
-# up to 1624, so planes i <= 1623 (lam < tet(1624) ~ 7.15e8) are exact.
-@given(st.integers(min_value=0, max_value=M.tet(1624) - 1))
+# up to TET_TRACED_MAX_I, so planes i <= TET_TRACED_EXACT_PLANES
+# (lam <= TET_TRACED_MAX_LAM ~ 7.15e8) are exact. The constants live in
+# core/mapping.py and are certified from derived float error bounds by
+# repro.analysis.envelope.
+@given(st.integers(min_value=0, max_value=M.TET_TRACED_MAX_LAM))
 @settings(max_examples=200)
 def test_tet_traced_matches_host_envelope(lam):
     i_h, j_h, k_h = M.tet_map(lam)
@@ -97,10 +100,10 @@ def test_tet_traced_matches_host_envelope(lam):
 def test_tet_traced_exact_at_plane_boundaries():
     """Plane boundaries are where the cbrt repair earns its keep."""
     edges = []
-    for i in [1, 2, 3, 100, 500, 1000, 1623]:
+    for i in [1, 2, 3, 100, 500, 1000, M.TET_TRACED_EXACT_PLANES]:
         t = M.tet(i)
         edges += [t - 1, t, t + 1]
-    edges = [e for e in set(edges) if 0 <= e < M.tet(1624)]
+    edges = [e for e in set(edges) if 0 <= e <= M.TET_TRACED_MAX_LAM]
     lams = jnp.asarray(sorted(edges), jnp.int32)
     it, jt, kt = jax.jit(jax.vmap(M.tet_map))(lams)
     for idx, l in enumerate(sorted(edges)):
