@@ -1,18 +1,10 @@
-"""Shared benchmark helpers."""
+"""Shared benchmark helpers — thin shim over repro.obs.timing.
+
+The actual timing discipline (warmup discard, block_until_ready sync,
+``bench_seconds`` histogram emission) lives in ``repro.obs.timing``; this
+module just re-exports it under the names the bench_*.py scripts import.
+"""
 
 from __future__ import annotations
 
-import time
-
-import jax
-
-
-def best_of(fn, *args, reps: int = 3):
-    """Best-of-N wall-clock of fn(*args); first call pays JIT compile."""
-    fn(*args)  # compile
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        best = min(best, time.perf_counter() - t0)
-    return best
+from repro.obs.timing import best_of, median_of_k  # noqa: F401

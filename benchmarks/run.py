@@ -35,6 +35,13 @@ def main(argv=None):
     args = ap.parse_args(argv)
     os.makedirs("artifacts", exist_ok=True)
 
+    from repro.obs import launch as OBS_LAUNCH
+    from repro.obs import sinks as SK
+
+    trace_path = SK.enable(trace_dir="artifacts/trace",
+                           metrics_path="artifacts/metrics.json")
+    print(f"obs: trace -> {trace_path}")
+
     from benchmarks import bench_mapping, bench_tet_mapping, bench_edm, \
         bench_attention, bench_packed, bench_roofline
 
@@ -143,6 +150,42 @@ def main(argv=None):
     else:
         print("  no lint report yet "
               "(run: python -m repro.analysis.lint --json)")
+
+    print("=" * 72)
+    print("obs: metrics + trajectory")
+    print("=" * 72)
+    kernels = OBS_LAUNCH.kernel_summary()
+    metrics_path = SK.flush_metrics()
+    record = {
+        "schema": SK.SCHEMA_VERSION,
+        "kind": "bench_trajectory",
+        "created_unix": time.time(),
+        "run_id": SK.run_id(),
+        "mode": ("smoke" if args.smoke else "fast" if args.fast else "full"),
+        "wall_s": time.time() - t0,
+        "kernels": kernels,
+    }
+    traj_path = "BENCH_trajectory.json"
+    traj = []
+    if os.path.exists(traj_path):
+        try:
+            with open(traj_path) as f:
+                traj = json.load(f)
+            assert isinstance(traj, list)
+        except Exception:
+            traj = []
+    traj.append(record)
+    with open(traj_path + ".tmp", "w") as f:
+        json.dump(traj, f, indent=1)
+    os.replace(traj_path + ".tmp", traj_path)
+    for name in sorted(kernels):
+        k = kernels[name]
+        print(f"  {name:28s} launched={k['tiles_launched']:>9d} "
+              f"bb={k['tiles_bb']:>9d} util={k['utilization']:.3f} "
+              f"I={k['improvement_vs_bb']:.3f}")
+    print(f"  metrics -> {metrics_path}; trajectory -> {traj_path} "
+          f"({len(traj)} records)")
+    SK.disable()
     print(f"\nall benchmarks done in {time.time()-t0:.1f}s")
 
 

@@ -40,4 +40,12 @@ if [ "$#" -eq 0 ]; then
     # assertion must keep executing offline.
     echo "== bench_packed --train --smoke =="
     python -m benchmarks.bench_packed --train --smoke
+    # Telemetry smoke tier: the benchmarks.run --smoke above wrote
+    # artifacts/metrics.json, a trace JSONL, and appended a record to
+    # BENCH_trajectory.json — all three must be schema-valid
+    # (src/repro/obs/schema.py), so the metric/trace formats cannot
+    # drift from their validators.
+    echo "== obs validate (metrics.json / trajectory / trace) =="
+    python -m repro.obs.validate artifacts/metrics.json \
+        BENCH_trajectory.json artifacts/trace/*.jsonl
 fi

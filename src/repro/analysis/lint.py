@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python -m repro.analysis.lint [--json PATH] [--pass NAME]
 
-Runs the three static passes (envelope, contracts, jaxpr), prints one line
+Runs the four static passes (envelope, contracts, jaxpr, obs), prints one line
 per check, and exits nonzero if any check fails. ``--json`` writes the full
 report (default path artifacts/lint_report.json when given without a
 value). Entirely offline: nothing here executes a kernel — mapping math
@@ -21,7 +21,7 @@ from typing import List
 
 from repro.analysis.contracts import CheckResult
 
-_PASSES = ("envelope", "contracts", "jaxpr")
+_PASSES = ("envelope", "contracts", "jaxpr", "obs")
 
 
 def run_pass(name: str) -> List[CheckResult]:
@@ -31,6 +31,8 @@ def run_pass(name: str) -> List[CheckResult]:
         from repro.analysis import verifier as mod
     elif name == "jaxpr":
         from repro.analysis import jaxpr_lint as mod
+    elif name == "obs":
+        from repro.analysis import obs_lint as mod
     else:
         raise SystemExit(f"unknown pass {name!r}; choose from {_PASSES}")
     return mod.run()
@@ -74,7 +76,7 @@ def main(argv=None) -> int:
                     help="write the full report as JSON "
                          "(default artifacts/lint_report.json)")
     ap.add_argument("--pass", dest="only", choices=_PASSES, default=None,
-                    help="run a single pass instead of all three")
+                    help="run a single pass instead of all of them")
     ap.add_argument("-q", "--quiet", action="store_true",
                     help="only print the summary line")
     args = ap.parse_args(argv)

@@ -1,0 +1,231 @@
+"""Telemetry-coverage lint — pass 4 of the block-space checker.
+
+The observability layer's core guarantee is *coverage*: every kernel
+launch in the repo goes through ``repro.obs.launch`` so every grid, tile
+and wasted block is measured. Three rule groups keep that true:
+
+  static coverage   AST walk over src/ + benchmarks/: any reference to
+                    the ``pallas_call`` attribute (``pl.pallas_call`` or
+                    a from-import) outside obs/launch.py is a failure —
+                    an uninstrumented launch site. String literals (the
+                    jaxpr primitive name used by jaxpr_lint) don't count.
+  counter fidelity  trace the jaxpr_lint fixture ops under a scoped
+                    registry and require the emitted ``launches_total``
+                    to equal the jaxpr's pallas_call primitive count —
+                    the wrapper must fire exactly once per launch, and a
+                    launch that bypasses the wrapper shows up as a
+                    counter deficit.
+  schema self-check obs/schema.py validators accept the events and
+                    metrics documents obs itself produces, and the meta
+                    constructors agree with core/analysis closed forms
+                    (tri(n) launched, n^2 BB bound, utilization 1.0).
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import List
+
+from repro.analysis.contracts import CheckResult
+
+
+def _res(rule, ok, detail=""):
+    return CheckResult(pass_name="obs", rule=rule, ok=ok, detail=detail)
+
+
+# ---------------------------------------------------------------------------
+# static coverage
+# ---------------------------------------------------------------------------
+
+# the one sanctioned pl.pallas_call site (relative to the repo root)
+_ALLOWED = ("src/repro/obs/launch.py",)
+
+
+def _repo_root() -> pathlib.Path:
+    # src/repro/analysis/obs_lint.py -> repo root is three parents up
+    # from the package dir (src/repro/analysis -> src/repro -> src -> root)
+    return pathlib.Path(__file__).resolve().parents[3]
+
+
+def _pallas_call_refs(path: pathlib.Path) -> List[int]:
+    """Line numbers of ``pallas_call`` attribute/name references (not
+    string literals) in one source file."""
+    try:
+        tree = ast.parse(path.read_text(encoding="utf-8"))
+    except SyntaxError:
+        return [-1]
+    lines = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute) and node.attr == "pallas_call":
+            lines.append(node.lineno)
+        elif isinstance(node, ast.Name) and node.id == "pallas_call":
+            lines.append(node.lineno)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            for alias in node.names:
+                if alias.name == "pallas_call" or \
+                        (alias.asname == "pallas_call"):
+                    lines.append(node.lineno)
+    return sorted(set(lines))
+
+
+def lint_static_coverage() -> List[CheckResult]:
+    root = _repo_root()
+    offenders = []
+    scanned = 0
+    for sub in ("src", "benchmarks", "examples"):
+        base = root / sub
+        if not base.is_dir():
+            continue
+        for path in sorted(base.rglob("*.py")):
+            rel = path.relative_to(root).as_posix()
+            if rel in _ALLOWED:
+                continue
+            scanned += 1
+            refs = _pallas_call_refs(path)
+            if refs:
+                offenders.append(f"{rel}:{refs}")
+    return [_res(
+        "obs.coverage.no_raw_pallas_call",
+        not offenders,
+        f"{scanned} files scanned; raw pallas_call references outside "
+        f"obs/launch.py: {offenders or 'none'}")]
+
+
+# ---------------------------------------------------------------------------
+# counter fidelity: launches_total == jaxpr pallas_call count
+# ---------------------------------------------------------------------------
+
+
+def _traced_launch_count(fn, *args) -> tuple:
+    """(launches_total emitted during trace, pallas_call primitives)."""
+    import jax
+
+    from repro.analysis import jaxpr_lint as JL
+    from repro.obs import metrics as MET
+
+    reg = MET.Registry("obs_lint")
+    with MET.scope(reg):
+        jaxpr = jax.make_jaxpr(fn)(*args).jaxpr
+    emitted = int(reg.counter_total("launches_total"))
+    return emitted, JL.count_primitive(jaxpr, "pallas_call")
+
+
+def lint_counter_fidelity() -> List[CheckResult]:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels.tri_3body import ops as O3
+    from repro.kernels.tri_attn import ops as OPS
+    from repro.kernels.tri_edm import ops as OE
+
+    out = []
+    x = np.zeros((32, 4), np.float32)
+
+    for label, fn in (
+            ("tri_edm.pallas",
+             lambda: _traced_launch_count(
+                 lambda v: OE.edm(v, block=8, impl="pallas"), x)),
+            ("tri_3body.pallas",
+             lambda: _traced_launch_count(
+                 lambda v: O3.three_body(v, block=8, impl="pallas"), x)),
+    ):
+        emitted, primitives = fn()
+        out.append(_res(
+            f"obs.counters.{label}",
+            emitted == primitives and emitted >= 1,
+            f"launches_total {emitted} vs jaxpr pallas_call {primitives} "
+            f"(must match, >= 1)"))
+
+    psched = OPS.make_packed_sched([32, 16, 48], block=16)
+    q = np.zeros((1, 2, psched.s_total, 8), np.float32)
+    emitted, primitives = _traced_launch_count(
+        jax.grad(lambda a, b, c: jnp.sum(
+            OPS.packed_prefill_attention(a, b, c, psched, impl="pallas")),
+            argnums=(0, 1, 2)),
+        q, q, q)
+    out.append(_res(
+        "obs.counters.packed_prefill.grad",
+        emitted == primitives == 3,
+        f"packed grad: launches_total {emitted} vs jaxpr pallas_call "
+        f"{primitives} (expect exactly 3: fwd + dq + dkv)"))
+
+    # scan fallback: zero pallas primitives, but the launch is still
+    # recorded (instrumented scan path == one launch)
+    emitted, primitives = _traced_launch_count(
+        lambda v: OE.edm(v, block=8, impl="scan"), x)
+    out.append(_res(
+        "obs.counters.tri_edm.scan",
+        emitted == 1 and primitives == 0,
+        f"scan fallback: launches_total {emitted} (expect 1), "
+        f"pallas_call {primitives} (expect 0)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# schema + closed-form self-checks
+# ---------------------------------------------------------------------------
+
+
+def lint_schema_selfcheck() -> List[CheckResult]:
+    from repro.core import analysis as A
+    from repro.core import mapping as M
+    from repro.kernels.tri_attn import ops as OPS
+    from repro.obs import launch as L
+    from repro.obs import metrics as MET
+    from repro.obs import schema as SCH
+
+    out = []
+
+    sched = OPS.make_sched(64, block_q=16, block_k=16)
+    meta = L.meta_from_trisched("tri_attn.fwd", sched, impl="pallas",
+                                cells=2)
+    st = A.strategy_stats(sched.n)["ltm"]
+    out.append(_res(
+        "obs.closed_forms.trisched",
+        meta.tiles_launched == st.launched == M.tri(sched.n)
+        and meta.tiles_bb == sched.n * sched.n
+        and meta.utilization == 1.0
+        and abs(meta.improvement_vs_bb - st.block_ratio_vs_bb) < 1e-12,
+        f"meta launched={meta.tiles_launched} vs analysis "
+        f"{st.launched} (= tri({sched.n})); I={meta.improvement_vs_bb} "
+        f"vs block_ratio {st.block_ratio_vs_bb}"))
+
+    ev = meta.as_event(phase="eager", bytes_moved=0)
+    errs = SCH.validate_event(ev, envelope=False)
+    out.append(_res(
+        "obs.schema.launch_event", not errs,
+        f"validate_event on meta.as_event: {errs or 'ok'}"))
+
+    reg = MET.Registry("selfcheck")
+    reg.counter_inc("launches_total", 1, {"name": "x", "impl": "scan"})
+    reg.histogram_observe("span_ms", 1.5, {"name": "s"})
+    doc = {"schema": "repro.obs/v1", "kind": "metrics",
+           "created_unix": 0.0, "run_id": None,
+           "registry": reg.name, **reg.snapshot()}
+    errs = SCH.validate_metrics(doc)
+    out.append(_res(
+        "obs.schema.metrics_doc", not errs,
+        f"validate_metrics on registry snapshot doc: {errs or 'ok'}"))
+
+    summary = L.kernel_summary(reg)
+    traj = [{"schema": "repro.obs/v1", "created_unix": 0.0,
+             "kernels": summary}]
+    errs = SCH.validate_trajectory(traj)
+    out.append(_res(
+        "obs.schema.trajectory", not errs,
+        f"validate_trajectory on kernel_summary record: {errs or 'ok'}"))
+    return out
+
+
+def run() -> List[CheckResult]:
+    out = []
+    for rule_fn in (lint_static_coverage, lint_counter_fidelity,
+                    lint_schema_selfcheck):
+        try:
+            out.extend(rule_fn())
+        except Exception as e:  # a crash IS a lint failure
+            out.append(_res(f"obs.{rule_fn.__name__}", False,
+                            f"exception: {type(e).__name__}: {e}"))
+    return out

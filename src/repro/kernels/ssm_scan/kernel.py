@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.obs import launch as OBS
+
 
 def _ssm_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, h0_ref, y_ref, hout_ref,
                 h_s, *, block_l: int, n_chunks: int):
@@ -78,8 +80,13 @@ def selective_scan(x, dt, A, Bt, Ct, h0=None, *, block_d: int = 256,
     n_chunks = l // block_l
     grid = (b, d // block_d, n_chunks)
 
-    y, h_out = pl.pallas_call(
+    y, h_out = OBS.instrumented_pallas_call(
         functools.partial(_ssm_kernel, block_l=block_l, n_chunks=n_chunks),
+        meta=OBS.meta_dense("ssm_scan.selective_scan", "ssm_scan",
+                            impl="pallas", grid=(n_chunks,),
+                            block_shape=(block_l, block_d),
+                            tiles_domain=n_chunks, kind="chunked",
+                            cells=b * (d // block_d)),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, block_l, block_d),

@@ -36,6 +36,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import mapping as M
+from repro.obs import launch as OBS
 
 
 def _strict_masks(i, j, k, blk: int):
@@ -90,8 +91,12 @@ def three_body_tet(x, block: int, *, strict: bool = False,
     assert t3 - 1 <= M.TET_TRACED_MAX_LAM, (
         f"grid {t3} exceeds the certified tet_map int32 envelope "
         f"(max lam {M.TET_TRACED_MAX_LAM}); use a larger block")
-    return pl.pallas_call(
+    return OBS.instrumented_pallas_call(
         functools.partial(_tet_kernel, block=block, strict=strict),
+        meta=OBS.meta_exact("tri_3body.tet", "tri_3body", impl="pallas",
+                            kind="tet", steps=t3,
+                            block_shape=(block, block, block),
+                            bb_bound=n * n * n),
         grid=(t3,),
         in_specs=[
             pl.BlockSpec((block, d), lambda lam: (M.tet_map(lam)[0], 0)),
@@ -131,8 +136,12 @@ def three_body_bb3(x, block: int, *, strict: bool = False,
     n_rows, d = x.shape
     assert n_rows % block == 0
     n = n_rows // block
-    return pl.pallas_call(
+    return OBS.instrumented_pallas_call(
         functools.partial(_bb3_kernel, block=block, strict=strict),
+        meta=OBS.meta_dense("tri_3body.bb3", "tri_3body", impl="pallas",
+                            grid=(n, n, n),
+                            block_shape=(block, block, block),
+                            tiles_domain=M.tet(n), kind="bb3"),
         grid=(n, n, n),
         in_specs=[
             pl.BlockSpec((block, d), lambda i, j, k: (i, 0)),
@@ -155,8 +164,11 @@ def dummy_tet(n: int, *, interpret: bool = True):
     """3D dummy kernel: map lambda -> (i, j, k), write i+j+k. Pure mapping
     cost; one f32 per block."""
     t3 = M.tet(n)
-    return pl.pallas_call(
+    return OBS.instrumented_pallas_call(
         _dummy_kernel,
+        meta=OBS.meta_exact("tri_3body.dummy_tet", "tri_3body",
+                            impl="pallas", kind="tet", steps=t3,
+                            block_shape=(1, 1), bb_bound=n * n * n),
         grid=(t3,),
         out_specs=pl.BlockSpec((1, 1), lambda lam: (lam, 0)),
         out_shape=jax.ShapeDtypeStruct((t3, 1), jnp.float32),

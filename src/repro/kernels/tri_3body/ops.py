@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from repro.core import mapping as M
 from repro.kernels.tri_3body import kernel as K
 from repro.kernels.tri_3body import ref as R
+from repro.obs import launch as OBS
 
 
 def _tile_body(xi, xj, xk, i, j, k, block: int, strict: bool):
@@ -43,6 +44,11 @@ def _three_body_scan(x, block: int, strict: bool = False):
     n_rows, d = x.shape
     n = n_rows // block
     t3 = M.tet(n)
+    OBS.record_launch(
+        OBS.meta_exact("tri_3body.tet", "tri_3body", impl="scan",
+                       kind="tet", steps=t3,
+                       block_shape=(block, block, block),
+                       bb_bound=n * n * n), (x,))
     xf = x.astype(jnp.float32)
 
     def step(_, lam):
@@ -60,6 +66,10 @@ def _three_body_scan_bb3(x, block: int, strict: bool = False):
     bb_scan (dead steps emit zeros)."""
     n_rows, d = x.shape
     n = n_rows // block
+    OBS.record_launch(
+        OBS.meta_dense("tri_3body.bb3", "tri_3body", impl="scan",
+                       grid=(n, n, n), block_shape=(block, block, block),
+                       tiles_domain=M.tet(n), kind="bb3"), (x,))
     xf = x.astype(jnp.float32)
 
     def step(_, lam):

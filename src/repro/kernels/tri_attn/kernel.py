@@ -38,6 +38,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import mapping as M
+from repro.obs import launch as OBS
 
 MASK_VALUE = -0.7 * float(jnp.finfo(jnp.float32).max)
 
@@ -302,8 +303,10 @@ def fwd(q, k, v, sched: TriSched, *, sm_scale=None, interpret=True):
     rm_i = lambda lam: sched.rm_map(lam)[0]
     rm_j = lambda lam: sched.rm_map(lam)[1]
     kernel = functools.partial(_fwd_kernel, sched=sched, scale=scale)
-    out, lse = pl.pallas_call(
+    out, lse = OBS.instrumented_pallas_call(
         kernel,
+        meta=OBS.meta_from_trisched("tri_attn.fwd", sched, impl="pallas",
+                                    cells=b * h, grid=grid),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, bq, d), lambda b_, h_, lam: (b_, h_, rm_i(lam), 0)),
@@ -431,8 +434,11 @@ def packed_fwd(q, k, v, psched: PackedTriSched, *, sm_scale=None,
             pltpu.VMEM((blk, d), jnp.float32),
         ],
     )
-    out, lse = pl.pallas_call(
+    out, lse = OBS.instrumented_pallas_call(
         kernel,
+        meta=OBS.meta_from_packed("tri_attn.packed_fwd", psched,
+                                  impl="pallas", cells=b * h,
+                                  grid=(b, h, psched.steps)),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct(q.shape, q.dtype),
@@ -572,9 +578,12 @@ def packed_bwd(q, k, v, out, lse, do, psched: PackedTriSched, *,
         _, _, _, q_row, _ = _packed_decode(lam, tbl_, n_req)
         return (b_, h_, q_row)
 
-    dq = pl.pallas_call(
+    dq = OBS.instrumented_pallas_call(
         functools.partial(_packed_dq_kernel, n_requests=n_req, blk=blk,
                           scale=scale),
+        meta=OBS.meta_from_packed("tri_attn.packed_bwd_dq", psched,
+                                  impl="pallas", cells=b * h,
+                                  grid=(b, h, psched.steps)),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(b, h, psched.steps),
@@ -609,9 +618,12 @@ def packed_bwd(q, k, v, out, lse, do, psched: PackedTriSched, *,
         _, _, _, _, k_row = _packed_decode_cm(lam, tbl_, n_req)
         return (b_, h_, k_row, 0)
 
-    dk_ph, dv_ph = pl.pallas_call(
+    dk_ph, dv_ph = OBS.instrumented_pallas_call(
         functools.partial(_packed_dkv_kernel, n_requests=n_req, blk=blk,
                           scale=scale),
+        meta=OBS.meta_from_packed("tri_attn.packed_bwd_dkv", psched,
+                                  impl="pallas", cells=b * h,
+                                  grid=(b, h, psched.steps)),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(b, h, psched.steps),
@@ -782,8 +794,13 @@ def packed_decode_fwd(q, k, v, tbl, *, capacity: int, blk: int,
             pltpu.VMEM((1, d), jnp.float32),
         ],
     )
-    out = pl.pallas_call(
+    out = OBS.instrumented_pallas_call(
         kernel,
+        meta=OBS.meta_exact("tri_attn.packed_decode_fwd", "tri_attn",
+                            impl="pallas", kind="decode_round",
+                            steps=capacity, block_shape=(1, blk),
+                            bb_bound=b * cache_tiles, cells=h,
+                            extra=(("capacity", capacity),)),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b + 1, h, d), q.dtype),
         interpret=interpret,
@@ -881,8 +898,10 @@ def bwd(q, k, v, out, lse, do, sched: TriSched, *, sm_scale=None,
     rm_i = lambda lam: sched.rm_map(lam)[0]
     rm_j = lambda lam: sched.rm_map(lam)[1]
     grid = (b, h, sched.rm_steps)
-    dq = pl.pallas_call(
+    dq = OBS.instrumented_pallas_call(
         functools.partial(_dq_kernel, sched=sched, scale=scale),
+        meta=OBS.meta_from_trisched("tri_attn.bwd_dq", sched, impl="pallas",
+                                    cells=b * h, grid=grid),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, bq, d), lambda b_, h_, lam: (b_, h_, rm_i(lam), 0)),
@@ -902,8 +921,11 @@ def bwd(q, k, v, out, lse, do, sched: TriSched, *, sm_scale=None,
     cm_i = lambda lam: sched.cm_map(lam)[0]
     cm_j = lambda lam: sched.cm_map(lam)[1]
     grid_cm = (b, h, sched.cm_steps)
-    dk_ph, dv_ph = pl.pallas_call(
+    dk_ph, dv_ph = OBS.instrumented_pallas_call(
         functools.partial(_dkv_kernel, sched=sched, scale=scale),
+        meta=OBS.meta_from_trisched("tri_attn.bwd_dkv", sched,
+                                    impl="pallas", cells=b * h,
+                                    grid=grid_cm),
         grid=grid_cm,
         in_specs=[
             pl.BlockSpec((1, 1, bq, d), lambda b_, h_, lam: (b_, h_, cm_i(lam), 0)),
@@ -987,8 +1009,11 @@ def fwd_bb(q, k, v, sched: TriSched, *, sm_scale=None, interpret=True):
     scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
     bq, bk, n = sched.bq, sched.bk, sched.n
     kernel = functools.partial(_bb_fwd_kernel, sched=sched, scale=scale)
-    out, lse = pl.pallas_call(
+    out, lse = OBS.instrumented_pallas_call(
         kernel,
+        meta=OBS.meta_dense("tri_attn.fwd_bb", "tri_attn", impl="pallas",
+                            grid=(n, n), block_shape=(bq, bk),
+                            tiles_domain=M.tri(n), cells=b * h),
         grid=(b, h, n, n),
         in_specs=[
             pl.BlockSpec((1, 1, bq, d), lambda b_, h_, i, j: (b_, h_, i, 0)),

@@ -30,6 +30,7 @@ from repro.kernels.tri_attn.kernel import (
     _packed_token_mask,
     _token_mask,
 )
+from repro.obs import launch as OBS
 
 
 def _slice_rows(x, blk_idx, blk):
@@ -275,12 +276,22 @@ def make_packed_scan_attention(psched: PackedTriSched, scale: float):
 
     def attn_fwd(q, k, v):
         hkv = k.shape[1]
+        OBS.record_launch(
+            OBS.meta_from_packed("tri_attn.packed_fwd", psched, impl="scan",
+                                 cells=q.shape[0] * q.shape[1]), (q, k, v))
         out_g, lse_g = cell_fwd(_group(q, hkv), k, v)
         return _ungroup(out_g), (q, k, v, _ungroup(out_g), lse_g)
 
     def attn_bwd(res, do):
         q, k, v, out, lse_g = res
         hkv = k.shape[1]
+        cells = q.shape[0] * q.shape[1]
+        OBS.record_launch(
+            OBS.meta_from_packed("tri_attn.packed_bwd_dq", psched,
+                                 impl="scan", cells=cells), (q, k, v, do))
+        OBS.record_launch(
+            OBS.meta_from_packed("tri_attn.packed_bwd_dkv", psched,
+                                 impl="scan", cells=cells), (q, k, v, do))
         delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32),
                         axis=-1)  # (B, H, S)
         qg, dog = _group(q, hkv), _group(do, hkv)
@@ -308,6 +319,11 @@ def packed_decode_scan(q, k, v, tbl, *, capacity: int, blk: int,
     s_cache, hkv = k.shape[1], k.shape[2]
     g = h // hkv
     cache_tiles = s_cache // blk
+    OBS.record_launch(
+        OBS.meta_exact("tri_attn.packed_decode_fwd", "tri_attn",
+                       impl="scan", kind="decode_round", steps=capacity,
+                       block_shape=(1, blk), bb_bound=b * cache_tiles,
+                       extra=(("capacity", capacity),)), (q, k, v))
 
     def step(carry, lam):
         m, l, acc, out = carry
@@ -464,12 +480,23 @@ def make_scan_attention(sched: TriSched, scale: float):
 
     def attn_fwd(q, k, v):
         hkv = k.shape[1]
+        OBS.record_launch(
+            OBS.meta_from_trisched("tri_attn.fwd", sched, impl="scan",
+                                   cells=q.shape[0] * q.shape[1]),
+            (q, k, v))
         out_g, lse_g = cell_fwd(_group(q, hkv), k, v)
         return _ungroup(out_g), (q, k, v, _ungroup(out_g), lse_g)
 
     def attn_bwd(res, do):
         q, k, v, out, lse_g = res
         hkv = k.shape[1]
+        cells = q.shape[0] * q.shape[1]
+        OBS.record_launch(
+            OBS.meta_from_trisched("tri_attn.bwd_dq", sched, impl="scan",
+                                   cells=cells), (q, k, v, do))
+        OBS.record_launch(
+            OBS.meta_from_trisched("tri_attn.bwd_dkv", sched, impl="scan",
+                                   cells=cells), (q, k, v, do))
         delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32),
                         axis=-1)  # (B, H, S)
         qg, dog = _group(q, hkv), _group(do, hkv)

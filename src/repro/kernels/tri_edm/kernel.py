@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import mapping as M
+from repro.obs import launch as OBS
 
 
 def _edm_tile(xi, xj, i, j, *, squared: bool):
@@ -56,8 +57,11 @@ def edm_ltm(x, block: int, *, squared: bool = False, interpret: bool = True):
     assert t - 1 <= M.LTM_TRACED_MAX_LAM, (
         f"grid {t} exceeds the certified ltm_map int32 envelope "
         f"(max lam {M.LTM_TRACED_MAX_LAM}); use a larger block")
-    return pl.pallas_call(
+    return OBS.instrumented_pallas_call(
         functools.partial(_ltm_kernel, squared=squared),
+        meta=OBS.meta_exact("tri_edm.ltm", "tri_edm", impl="pallas",
+                            kind="ltm", steps=t, block_shape=(block, block),
+                            bb_bound=n * n),
         grid=(t,),
         in_specs=[
             pl.BlockSpec((block, d), lambda lam: (M.ltm_map(lam)[0], 0)),
@@ -88,8 +92,11 @@ def edm_bb(x, block: int, *, squared: bool = False, interpret: bool = True):
     n_rows, d = x.shape
     assert n_rows % block == 0
     n = n_rows // block
-    return pl.pallas_call(
+    return OBS.instrumented_pallas_call(
         functools.partial(_bb_kernel, squared=squared),
+        meta=OBS.meta_dense("tri_edm.bb", "tri_edm", impl="pallas",
+                            grid=(n, n), block_shape=(block, block),
+                            tiles_domain=M.tri(n)),
         grid=(n, n),
         in_specs=[
             pl.BlockSpec((block, d), lambda i, j: (i, 0)),
@@ -111,8 +118,11 @@ def dummy_ltm(n: int, *, interpret: bool = True):
     """Paper's dummy kernel: map lambda -> (i, j), write i+j. Pure mapping
     cost; one f32 per block."""
     t = M.tri(n)
-    return pl.pallas_call(
+    return OBS.instrumented_pallas_call(
         _dummy_kernel,
+        meta=OBS.meta_exact("tri_edm.dummy_ltm", "tri_edm", impl="pallas",
+                            kind="ltm", steps=t, block_shape=(1, 1),
+                            bb_bound=n * n),
         grid=(t,),
         out_specs=pl.BlockSpec((1, 1), lambda lam: (lam, 0)),
         out_shape=jax.ShapeDtypeStruct((t, 1), jnp.float32),

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.core import mapping as M
 from repro.kernels.tri_edm import kernel as K
 from repro.kernels.tri_edm import ref as R
+from repro.obs import launch as OBS
 
 
 def _edm_scan(x, block: int, *, squared: bool = False):
@@ -22,6 +23,10 @@ def _edm_scan(x, block: int, *, squared: bool = False):
     n_rows, d = x.shape
     n = n_rows // block
     t = M.tri(n)
+    OBS.record_launch(
+        OBS.meta_exact("tri_edm.ltm", "tri_edm", impl="scan", kind="ltm",
+                       steps=t, block_shape=(block, block),
+                       bb_bound=n * n), (x,))
     xf = x.astype(jnp.float32)
     sq = jnp.sum(xf * xf, axis=-1)
 
@@ -48,6 +53,10 @@ def _edm_scan_bb(x, block: int, *, squared: bool = False):
     emit zeros."""
     n_rows, d = x.shape
     n = n_rows // block
+    OBS.record_launch(
+        OBS.meta_dense("tri_edm.bb", "tri_edm", impl="scan", grid=(n, n),
+                       block_shape=(block, block), tiles_domain=M.tri(n)),
+        (x,))
     xf = x.astype(jnp.float32)
     sq = jnp.sum(xf * xf, axis=-1)
 

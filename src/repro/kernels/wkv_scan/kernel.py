@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.obs import launch as OBS
+
 
 def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref, out_ref,
                 sout_ref, s_s, *, block_l: int, n_chunks: int):
@@ -71,8 +73,12 @@ def wkv(r, k, v, lw, u, s0=None, *, block_l: int = 64,
 
     seq_spec = pl.BlockSpec((1, block_l, 1, hd),
                             lambda bi, hi, ci: (bi, ci, hi, 0))
-    out, s_out = pl.pallas_call(
+    out, s_out = OBS.instrumented_pallas_call(
         functools.partial(_wkv_kernel, block_l=block_l, n_chunks=n_chunks),
+        meta=OBS.meta_dense("wkv_scan.wkv", "wkv_scan", impl="pallas",
+                            grid=(n_chunks,), block_shape=(block_l, hd),
+                            tiles_domain=n_chunks, kind="chunked",
+                            cells=b * h),
         grid=grid,
         in_specs=[
             seq_spec, seq_spec, seq_spec, seq_spec,           # r, k, v, lw

@@ -1,0 +1,18 @@
+"""repro.obs — block-space telemetry: metrics, spans, launch tracing.
+
+Submodules (see README.md in this directory for the full tour):
+
+  metrics   counters/gauges/histograms with labels; global + scoped
+            registries; RingLog bounded log.
+  trace     nestable wall-clock spans (``obs.trace.span("prefill")``)
+            with block_until_ready semantics via ``Span.attach``.
+  launch    ``instrumented_pallas_call`` / ``instrumented_call`` — the
+            only launch sites in the repo; per-launch waste metrics.
+  sinks     JSONL trace stream + metrics.json writer (off by default).
+  timing    median-of-k benchmark timing (benchmarks/_util.py shim).
+  schema    hand-rolled validators for every sink format.
+"""
+
+from repro.obs import launch, metrics, schema, sinks, timing, trace  # noqa: F401
+
+span = trace.span

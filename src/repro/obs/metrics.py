@@ -1,0 +1,290 @@
+"""Metrics registry — counters, gauges, histograms with labels.
+
+The paper's claim is quantitative (wasted blocks O(n^2) -> O(n), I ~ 1.15
+on Kepler), so the reproduction keeps every launch/tile/waste quantity as
+a *named metric* instead of ad-hoc dict bookkeeping. Three instrument
+kinds, all label-aware:
+
+  Counter    monotone float/int accumulator (launches, tiles, tokens).
+  Gauge      last-write-wins value (capacity buckets, queue depth).
+  Histogram  fixed-boundary bucket counts + sum/count/min/max (latencies,
+             per-round tile totals). Boundaries default to powers of two.
+
+A ``Registry`` holds instrument values keyed by (name, sorted labels).
+There is one process-global registry (``global_registry()``) and a stack
+of *scoped* collectors: ``with metrics.scope(reg): ...`` routes every
+emission inside the block to ``reg`` AND to all outer scopes including
+the global one — an Engine can own its per-instance registry while the
+process totals keep accumulating. Emission helpers (``counter_inc`` et
+al.) write to every active registry; the instrument handle classes are
+thin sugar over them.
+
+Everything here is plain-Python dict arithmetic: no JAX imports, so the
+overhead per emission is O(1) dict ops and the instrumented hot paths
+(see obs/launch.py) stay well under the 5%% telemetry budget even before
+jit removes them from the compiled path entirely.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+# Default histogram boundaries: powers of two spanning sub-ms wall clocks
+# to large tile counts. A value lands in the first bucket whose upper
+# bound is >= value; the overflow bucket is +inf.
+DEFAULT_BUCKETS: Tuple[float, ...] = tuple(
+    float(2 ** e) for e in range(-10, 21))
+
+
+def _key(name: str, labels: Optional[dict]) -> Tuple:
+    if not labels:
+        return (name,)
+    return (name,) + tuple(sorted(labels.items()))
+
+
+class Registry:
+    """One collection of instrument values. Thread-safe (single lock; the
+    engine emits from Python callbacks, sinks may drain from elsewhere)."""
+
+    def __init__(self, name: str = ""):
+        self.name = name
+        self._lock = threading.Lock()
+        self._counters: Dict[Tuple, float] = {}
+        self._gauges: Dict[Tuple, float] = {}
+        self._hists: Dict[Tuple, dict] = {}
+        self._hist_bounds: Dict[str, Tuple[float, ...]] = {}
+
+    # -- emission ------------------------------------------------------------
+    def counter_inc(self, name: str, value: float = 1.0,
+                    labels: Optional[dict] = None):
+        assert value >= 0, f"counter {name} must be monotone (got {value})"
+        k = _key(name, labels)
+        with self._lock:
+            self._counters[k] = self._counters.get(k, 0) + value
+
+    def gauge_set(self, name: str, value: float,
+                  labels: Optional[dict] = None):
+        with self._lock:
+            self._gauges[_key(name, labels)] = value
+
+    def histogram_observe(self, name: str, value: float,
+                          labels: Optional[dict] = None,
+                          buckets: Optional[Sequence[float]] = None):
+        bounds = tuple(buckets) if buckets else \
+            self._hist_bounds.get(name, DEFAULT_BUCKETS)
+        k = _key(name, labels)
+        with self._lock:
+            self._hist_bounds.setdefault(name, bounds)
+            h = self._hists.get(k)
+            if h is None:
+                h = {"count": 0, "sum": 0.0, "min": float("inf"),
+                     "max": float("-inf"),
+                     "bucket_counts": [0] * (len(bounds) + 1)}
+                self._hists[k] = h
+            h["count"] += 1
+            h["sum"] += value
+            h["min"] = min(h["min"], value)
+            h["max"] = max(h["max"], value)
+            for b_i, bound in enumerate(bounds):
+                if value <= bound:
+                    h["bucket_counts"][b_i] += 1
+                    break
+            else:
+                h["bucket_counts"][-1] += 1
+
+    # -- reads ---------------------------------------------------------------
+    def counter_value(self, name: str, labels: Optional[dict] = None):
+        return self._counters.get(_key(name, labels), 0)
+
+    def counter_total(self, name: str) -> float:
+        """Sum of a counter over every label combination."""
+        with self._lock:
+            return sum(v for k, v in self._counters.items() if k[0] == name)
+
+    def gauge_value(self, name: str, labels: Optional[dict] = None,
+                    default=None):
+        return self._gauges.get(_key(name, labels), default)
+
+    def histogram_value(self, name: str, labels: Optional[dict] = None):
+        return self._hists.get(_key(name, labels))
+
+    @staticmethod
+    def _fmt(k: Tuple) -> str:
+        if len(k) == 1:
+            return k[0]
+        inner = ",".join(f"{lk}={lv}" for lk, lv in k[1:])
+        return f"{k[0]}{{{inner}}}"
+
+    def snapshot(self) -> dict:
+        """Aggregated view of every instrument — the metrics.json payload
+        body (see obs/schema.py for the enclosing document format)."""
+        with self._lock:
+            hists = {}
+            for k, h in self._hists.items():
+                bounds = self._hist_bounds[k[0]]
+                hists[self._fmt(k)] = {
+                    "count": h["count"], "sum": h["sum"],
+                    "min": h["min"], "max": h["max"],
+                    "mean": h["sum"] / max(h["count"], 1),
+                    "buckets": list(bounds),
+                    "bucket_counts": list(h["bucket_counts"]),
+                }
+            return {
+                "counters": {self._fmt(k): v
+                             for k, v in sorted(self._counters.items())},
+                "gauges": {self._fmt(k): v
+                           for k, v in sorted(self._gauges.items())},
+                "histograms": hists,
+            }
+
+    def reset(self):
+        with self._lock:
+            self._counters.clear()
+            self._gauges.clear()
+            self._hists.clear()
+            self._hist_bounds.clear()
+
+
+# ---------------------------------------------------------------------------
+# Process-global registry + scoped-collector stack
+# ---------------------------------------------------------------------------
+
+_GLOBAL = Registry("global")
+_SCOPES: List[Registry] = []
+_scope_lock = threading.Lock()
+
+
+def global_registry() -> Registry:
+    return _GLOBAL
+
+
+def active_registries() -> List[Registry]:
+    """Every registry an emission should land in: global + open scopes."""
+    return [_GLOBAL] + list(_SCOPES)
+
+
+@contextlib.contextmanager
+def scope(registry: Registry):
+    """Route emissions inside the block to ``registry`` too (nestable)."""
+    with _scope_lock:
+        _SCOPES.append(registry)
+    try:
+        yield registry
+    finally:
+        with _scope_lock:
+            _SCOPES.remove(registry)
+
+
+def counter_inc(name: str, value: float = 1.0,
+                labels: Optional[dict] = None):
+    for reg in active_registries():
+        reg.counter_inc(name, value, labels)
+
+
+def gauge_set(name: str, value: float, labels: Optional[dict] = None):
+    for reg in active_registries():
+        reg.gauge_set(name, value, labels)
+
+
+def histogram_observe(name: str, value: float,
+                      labels: Optional[dict] = None,
+                      buckets: Optional[Sequence[float]] = None):
+    for reg in active_registries():
+        reg.histogram_observe(name, value, labels, buckets)
+
+
+# ---------------------------------------------------------------------------
+# Instrument handles (sugar for registry-backed named metrics)
+# ---------------------------------------------------------------------------
+
+
+class Counter:
+    """Handle bound to one registry (engine-style exact bookkeeping) or to
+    the active-scope fan-out when registry=None."""
+
+    def __init__(self, name: str, registry: Optional[Registry] = None,
+                 labels: Optional[dict] = None):
+        self.name, self.registry, self.labels = name, registry, labels
+
+    def inc(self, value: float = 1.0):
+        if self.registry is not None:
+            self.registry.counter_inc(self.name, value, self.labels)
+        else:
+            counter_inc(self.name, value, self.labels)
+
+    @property
+    def value(self):
+        reg = self.registry or _GLOBAL
+        return reg.counter_value(self.name, self.labels)
+
+
+class Gauge:
+    def __init__(self, name: str, registry: Optional[Registry] = None,
+                 labels: Optional[dict] = None):
+        self.name, self.registry, self.labels = name, registry, labels
+
+    def set(self, value: float):
+        if self.registry is not None:
+            self.registry.gauge_set(self.name, value, self.labels)
+        else:
+            gauge_set(self.name, value, self.labels)
+
+    @property
+    def value(self):
+        reg = self.registry or _GLOBAL
+        return reg.gauge_value(self.name, self.labels)
+
+
+class Histogram:
+    def __init__(self, name: str, registry: Optional[Registry] = None,
+                 labels: Optional[dict] = None,
+                 buckets: Optional[Sequence[float]] = None):
+        self.name, self.registry = name, registry
+        self.labels, self.buckets = labels, buckets
+
+    def observe(self, value: float):
+        if self.registry is not None:
+            self.registry.histogram_observe(self.name, value, self.labels,
+                                            self.buckets)
+        else:
+            histogram_observe(self.name, value, self.labels, self.buckets)
+
+    @property
+    def value(self):
+        reg = self.registry or _GLOBAL
+        return reg.histogram_value(self.name, self.labels)
+
+
+class RingLog:
+    """Bounded append-only log: the capped replacement for the engine's
+    unbounded ``admit_order_log`` / ``admit_round_tiles`` lists. Keeps the
+    last ``maxlen`` entries (default 1024 rounds) plus the TOTAL number of
+    appends, so long-running engines stay O(maxlen) memory while the
+    counters stay exact."""
+
+    def __init__(self, maxlen: int = 1024):
+        from collections import deque
+
+        assert maxlen >= 1
+        self.maxlen = maxlen
+        self._dq = deque(maxlen=maxlen)
+        self.total_appended = 0
+
+    def append(self, item):
+        self._dq.append(item)
+        self.total_appended += 1
+
+    @property
+    def dropped(self) -> int:
+        return self.total_appended - len(self._dq)
+
+    def items(self) -> list:
+        return list(self._dq)
+
+    def __len__(self):
+        return len(self._dq)
+
+    def __getitem__(self, idx):
+        return list(self._dq)[idx]

@@ -1,0 +1,120 @@
+"""Event sinks — JSONL trace stream + aggregated metrics.json.
+
+Two outputs, both OFF by default (zero file I/O until ``enable()``):
+
+  * trace sink: one JSON object per line appended to
+    ``artifacts/trace/trace-<run_id>.jsonl``. Every event carries
+    ``seq`` (monotone per-run) and ``ts_unix``; the payload is whatever
+    the producer built (``launch`` events from obs/launch.py, ``span``
+    events from obs/trace.py). Schema: obs/schema.py.
+  * metrics sink: ``flush_metrics()`` writes the global registry
+    snapshot as a schema-versioned document to
+    ``artifacts/metrics.json`` (path set at ``enable()`` time or
+    per-call).
+
+``emit_event`` is always safe to call — when the trace sink is disabled
+it is a single boolean check. Producers that build expensive payloads
+should guard on ``trace_enabled()`` first (obs/launch.py does)."""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Optional
+
+from repro.obs import metrics as MET
+
+SCHEMA_VERSION = "repro.obs/v1"
+
+_lock = threading.Lock()
+_trace_fh = None
+_trace_path: Optional[str] = None
+_metrics_path: Optional[str] = None
+_seq = 0
+_run_id: Optional[str] = None
+
+
+def enable(trace_dir: Optional[str] = "artifacts/trace",
+           metrics_path: Optional[str] = "artifacts/metrics.json",
+           run_id: Optional[str] = None) -> Optional[str]:
+    """Open the sinks. ``trace_dir=None`` keeps the trace sink off while
+    still setting the metrics path. Returns the trace file path."""
+    global _trace_fh, _trace_path, _metrics_path, _seq, _run_id
+    with _lock:
+        if _trace_fh is not None:
+            _trace_fh.close()
+            _trace_fh = None
+        _metrics_path = metrics_path
+        _seq = 0
+        _run_id = run_id or time.strftime("%Y%m%d-%H%M%S") + f"-{os.getpid()}"
+        _trace_path = None
+        if trace_dir is not None:
+            os.makedirs(trace_dir, exist_ok=True)
+            _trace_path = os.path.join(trace_dir, f"trace-{_run_id}.jsonl")
+            _trace_fh = open(_trace_path, "a", encoding="utf-8")
+        return _trace_path
+
+
+def disable():
+    """Close the trace sink and forget the metrics path."""
+    global _trace_fh, _trace_path, _metrics_path
+    with _lock:
+        if _trace_fh is not None:
+            _trace_fh.close()
+        _trace_fh = None
+        _trace_path = None
+        _metrics_path = None
+
+
+def trace_enabled() -> bool:
+    return _trace_fh is not None
+
+
+def current_trace_path() -> Optional[str]:
+    return _trace_path
+
+
+def run_id() -> Optional[str]:
+    return _run_id
+
+
+def emit_event(event: dict):
+    """Append one event line to the trace sink (no-op when disabled)."""
+    global _seq
+    if _trace_fh is None:
+        return
+    with _lock:
+        if _trace_fh is None:  # racing disable()
+            return
+        _seq += 1
+        record = {"schema": SCHEMA_VERSION, "seq": _seq,
+                  "ts_unix": time.time(), "run_id": _run_id}
+        record.update(event)
+        _trace_fh.write(json.dumps(record) + "\n")
+        _trace_fh.flush()
+        MET.global_registry().counter_inc("obs_events_written", 1)
+
+
+def flush_metrics(path: Optional[str] = None,
+                  registry: Optional["MET.Registry"] = None) -> Optional[str]:
+    """Write the registry snapshot as a metrics.json document. Uses the
+    path given at ``enable()`` time unless overridden; no-op (returns
+    None) when neither is set."""
+    target = path or _metrics_path
+    if target is None:
+        return None
+    reg = registry or MET.global_registry()
+    doc = {"schema": SCHEMA_VERSION, "kind": "metrics",
+           "created_unix": time.time(), "run_id": _run_id,
+           "registry": reg.name, **reg.snapshot()}
+    d = os.path.dirname(target)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    tmp = target + ".tmp"
+    with open(tmp, "w", encoding="utf-8") as fh:
+        json.dump(doc, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    os.replace(tmp, target)
+    return target

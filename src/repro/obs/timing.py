@@ -1,0 +1,52 @@
+"""The one timing code path for every benchmark.
+
+``median_of_k`` is the canonical measurement: ``warmup`` untimed calls
+(first one pays JIT compile), then ``reps`` timed calls each synced with
+``jax.block_until_ready``, reported as the median — robust to the odd
+scheduling hiccup in a way best-of/mean are not. Each measurement also
+lands in the ``bench_seconds`` histogram (labeled by ``name``) so the
+metrics.json aggregate carries the same numbers the bench tables print.
+
+``best_of`` is kept as a compat alias for the old benchmarks/_util.py
+behaviour (min instead of median, 1 warmup) — benchmarks/_util.py is now
+a shim over this module."""
+
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+from repro.obs import metrics as MET
+
+
+def _times(fn, args, reps: int, warmup: int, name: Optional[str]):
+    import jax
+
+    for _ in range(max(warmup, 0)):
+        jax.block_until_ready(fn(*args))
+    out = []
+    for _ in range(max(reps, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        dt = time.perf_counter() - t0
+        out.append(dt)
+        if name is not None:
+            MET.histogram_observe("bench_seconds", dt,
+                                  labels={"name": name})
+    return out
+
+
+def median_of_k(fn, *args, reps: int = 5, warmup: int = 1,
+                name: Optional[str] = None) -> float:
+    """Median wall-clock seconds of fn(*args) over ``reps`` synced calls,
+    after ``warmup`` discarded calls."""
+    ts = sorted(_times(fn, args, reps, warmup, name))
+    k = len(ts)
+    mid = k // 2
+    return ts[mid] if k % 2 else 0.5 * (ts[mid - 1] + ts[mid])
+
+
+def best_of(fn, *args, reps: int = 3, warmup: int = 1,
+            name: Optional[str] = None) -> float:
+    """Best-of-N wall clock (compat with the old benchmarks/_util.py)."""
+    return min(_times(fn, args, reps, warmup, name))

@@ -37,6 +37,8 @@ import numpy as np
 
 from repro.core import mapping as M
 from repro.models import model as MD
+from repro.obs import metrics as MET
+from repro.obs import trace as TR
 from repro.serve import decode as D
 
 
@@ -58,7 +60,7 @@ class Engine:
                  prefill_block: int = 16, prefill_impl: str = "scan",
                  prefill_bucket: int = 0, decode_mode: str = "auto",
                  decode_block: int = 16, decode_impl: str = "scan",
-                 admit_order: str = "cost"):
+                 admit_order: str = "cost", stats_log_rounds: int = 1024):
         self.params, self.cfg = params, cfg
         self.B, self.max_len = slots, max_len
         self.cache = MD.init_cache(cfg, slots, max_len, cache_dtype)
@@ -113,16 +115,46 @@ class Engine:
         # observability: ONE packed launch per admit round (prefill) and
         # per decode round; prefill vs decode launches counted apart, plus
         # per-round tile accounting for the packed-vs-padded claim.
+        # Counters live in a per-engine obs registry (mirrored into the
+        # process-global registry as engine_* so metrics.json aggregates
+        # them); the per-round admit logs are RingLog-capped at
+        # ``stats_log_rounds`` (default 1024) so long-running engines stay
+        # O(cap) memory — totals stay exact via RingLog.total_appended,
+        # surfaced as stats["admit_rounds_total"] / ["admit_log_dropped"].
+        # The legacy ``stats`` dict is now a read-only property view.
+        self.registry = MET.Registry("engine")
         # admit_order_log[r] is round r's admitted (uid, tiles) pairs in
         # launch order; admit_round_tiles[r] its packed tile total.
-        self.stats = {"prefill_launches": 0, "prefill_requests": 0,
-                      "prefill_tokens": 0, "admit_rounds": 0,
-                      "admit_order_log": [], "admit_round_tiles": [],
-                      "decode_rounds": 0, "decode_packed_launches": 0,
-                      "decode_lockstep_launches": 0,
-                      "decode_tiles_packed": 0, "decode_tiles_padded": 0}
+        self._admit_order_log = MET.RingLog(maxlen=stats_log_rounds)
+        self._admit_round_tiles = MET.RingLog(maxlen=stats_log_rounds)
         self._decode = jax.jit(
             lambda p, c, t, pos: MD.decode_step(p, cfg, c, t, pos))
+
+    # -- telemetry -----------------------------------------------------------
+    _COUNTERS = ("prefill_launches", "prefill_requests", "prefill_tokens",
+                 "admit_rounds", "decode_rounds", "decode_packed_launches",
+                 "decode_lockstep_launches", "decode_tiles_packed",
+                 "decode_tiles_padded")
+
+    def _inc(self, name: str, value: int = 1):
+        """Count into the per-engine registry AND the process-global one
+        (prefixed engine_* there, so metrics.json aggregates every engine
+        without label collisions)."""
+        self.registry.counter_inc(name, value)
+        MET.counter_inc("engine_" + name, value)
+
+    @property
+    def stats(self) -> dict:
+        """Read-only compat view of the registry-backed counters (the old
+        ad-hoc dict, plus ring-buffer totals). Mutating the returned dict
+        does NOT feed back into the engine."""
+        st = {name: int(self.registry.counter_value(name))
+              for name in self._COUNTERS}
+        st["admit_order_log"] = self._admit_order_log.items()
+        st["admit_round_tiles"] = self._admit_round_tiles.items()
+        st["admit_rounds_total"] = self._admit_order_log.total_appended
+        st["admit_log_dropped"] = self._admit_order_log.dropped
+        return st
 
     # -- admission -----------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new: int, uid: int):
@@ -154,9 +186,9 @@ class Engine:
         self.pos = self.pos.at[slot].set(len(toks) - 1)
         self.slot_req[slot] = req
         self.remaining[slot] = req.max_new
-        self.stats["prefill_launches"] += len(toks)
-        self.stats["prefill_requests"] += 1
-        self.stats["prefill_tokens"] += len(toks)
+        self._inc("prefill_launches", len(toks))
+        self._inc("prefill_requests")
+        self._inc("prefill_tokens", len(toks))
 
     def _splice_slot(self, slot: int, states, start: int, length: int):
         """Copy one request's KV rows [start, start+length) out of the
@@ -185,12 +217,14 @@ class Engine:
         O(sum of prompt lengths) sequential decode-step loop with a single
         sum_r tri(n_r)-tile launch (see serve/decode.packed_prefill)."""
         prompts = [req.prompt for _, req in pairs]
-        _, starts, lens, _, states = D.packed_prefill(
-            self.params, self.cfg, prompts, block=self.prefill_block,
-            attn_impl=self.prefill_impl, bucket=self.prefill_bucket)
-        self.stats["prefill_launches"] += 1
-        self.stats["prefill_requests"] += len(pairs)
-        self.stats["prefill_tokens"] += sum(lens)
+        with TR.span("engine.admit_batch", requests=len(pairs)) as sp:
+            _, starts, lens, _, states = D.packed_prefill(
+                self.params, self.cfg, prompts, block=self.prefill_block,
+                attn_impl=self.prefill_impl, bucket=self.prefill_bucket)
+            sp.attach(states)
+        self._inc("prefill_launches")
+        self._inc("prefill_requests", len(pairs))
+        self._inc("prefill_tokens", sum(lens))
         for (slot, req), start, length in zip(pairs, starts, lens):
             self._splice_slot(slot, states, start, length)
             self.last_tok = self.last_tok.at[slot, 0].set(
@@ -241,10 +275,10 @@ class Engine:
             return
         reqs = self._pick_requests(take)
         pairs = list(zip(free, reqs))
-        self.stats["admit_rounds"] += 1
-        self.stats["admit_order_log"].append(
+        self._inc("admit_rounds")
+        self._admit_order_log.append(
             [(r.uid, self._prefill_tiles(r)) for r in reqs])
-        self.stats["admit_round_tiles"].append(
+        self._admit_round_tiles.append(
             sum(self._prefill_tiles(r) for r in reqs))
         if self.prefill_mode == "packed":
             self._admit_batch(pairs)
@@ -272,19 +306,25 @@ class Engine:
         skewed = len(live) < self.B or len(set(tiles)) > 1
         use_packed = self.decode_mode == "packed" or (
             self.decode_mode == "auto" and skewed)
-        self.stats["decode_rounds"] += 1
-        self.stats["decode_tiles_packed"] += sum(tiles)
-        self.stats["decode_tiles_padded"] += len(live) * max(tiles)
+        self._inc("decode_rounds")
+        self._inc("decode_tiles_packed", sum(tiles))
+        self._inc("decode_tiles_padded", len(live) * max(tiles))
         if use_packed:
-            logits, cache, _ = D.decode_step_packed(
-                self.params, self.cfg, self.cache, self.last_tok, self.pos,
-                kv_lens, live, block=self.decode_block,
-                impl=self.decode_impl)
-            self.stats["decode_packed_launches"] += 1
+            with TR.span("engine.decode_round", mode="packed",
+                         live=len(live)) as sp:
+                logits, cache, _ = D.decode_step_packed(
+                    self.params, self.cfg, self.cache, self.last_tok,
+                    self.pos, kv_lens, live, block=self.decode_block,
+                    impl=self.decode_impl)
+                sp.attach(logits)
+            self._inc("decode_packed_launches")
         else:
-            logits, cache = self._decode(self.params, self.cache,
-                                         self.last_tok, self.pos)
-            self.stats["decode_lockstep_launches"] += 1
+            with TR.span("engine.decode_round", mode="lockstep",
+                         live=len(live)) as sp:
+                logits, cache = self._decode(self.params, self.cache,
+                                             self.last_tok, self.pos)
+                sp.attach(logits)
+            self._inc("decode_lockstep_launches")
         self.key, k = jax.random.split(self.key)
         nxt = D.sample_logits(k, logits[:, 0], temperature=self.temperature,
                               vocab_size=self.cfg.vocab_size)

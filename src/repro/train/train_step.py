@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import model as MD
+from repro.obs import metrics as MET
+from repro.obs import trace as TR
 from repro.train import optimizer as OPT
 
 
@@ -67,7 +69,15 @@ def make_train_step(cfg, opt: OPT.OptConfig, *, microbatches: int = 1,
 
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
+    step_labels = {"impl": attn_impl,
+                   "packed": "1" if packed is not None else "0"}
+
     def train_step(state: TrainState, batch):
+        # Host-side telemetry: fires per eager call, or once per trace when
+        # the caller jits the step (the same trace-time convention as the
+        # kernel launch counters — see obs/launch.py).
+        MET.counter_inc("train_step_calls", 1, step_labels)
+        MET.counter_inc("train_microbatches", microbatches, step_labels)
         params = state.params
 
         if microbatches == 1:
@@ -107,7 +117,15 @@ def make_train_step(cfg, opt: OPT.OptConfig, *, microbatches: int = 1,
                                step=state.step + 1, err_state=err)
         return new_state, metrics
 
-    return train_step
+    def instrumented_step(state: TrainState, batch):
+        # Wall-clock covers device work for eager callers (attach ->
+        # block_until_ready); under jit the span covers the trace only.
+        with TR.span("train.step", **step_labels) as sp:
+            new_state, metrics = train_step(state, batch)
+            sp.attach(metrics)
+        return new_state, metrics
+
+    return instrumented_step
 
 
 # ---------------------------------------------------------------------------
@@ -133,6 +151,7 @@ def make_prefill_step(cfg, *, attn_impl: str = "scan", block: int = 512,
     """prefill_step(params, batch) -> (last-position logits, decode cache)."""
 
     def prefill_step(params, batch):
+        MET.counter_inc("prefill_step_calls", 1, {"impl": attn_impl})
         s_total = (batch["tokens"].shape[1] if "tokens" in batch else 0)
         if "embeds" in batch:
             s_total += batch["embeds"].shape[1]

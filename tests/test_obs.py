@@ -1,0 +1,308 @@
+"""Telemetry-subsystem tests: registry semantics, span nesting/exception
+safety, launch counters vs schedule contracts, trace-JSONL schema
+round-trip, engine decode-tile accounting, and the RingLog cap."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import analysis as A
+from repro.core import mapping as M
+from repro.obs import launch as L
+from repro.obs import metrics as MET
+from repro.obs import schema as SCH
+from repro.obs import sinks as SK
+from repro.obs import timing as TM
+from repro.obs import trace as TR
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_counter_gauge_histogram():
+    reg = MET.Registry("t")
+    reg.counter_inc("c", 2, {"k": "a"})
+    reg.counter_inc("c", 3, {"k": "a"})
+    reg.counter_inc("c", 7, {"k": "b"})
+    assert reg.counter_value("c", {"k": "a"}) == 5
+    assert reg.counter_total("c") == 12
+    reg.gauge_set("g", 4.5)
+    assert reg.gauge_value("g") == 4.5
+    reg.histogram_observe("h", 3.0)
+    h = reg.histogram_value("h")
+    assert h["count"] == 1 and h["sum"] == 3.0
+    snap = reg.snapshot()
+    assert snap["counters"]["c{k=a}"] == 5
+    hs = snap["histograms"]["h"]
+    assert len(hs["bucket_counts"]) == len(hs["buckets"]) + 1
+    assert sum(hs["bucket_counts"]) == hs["count"]
+    with pytest.raises(AssertionError):
+        reg.counter_inc("c", -1)
+
+
+def test_scope_fans_out_to_global_and_scoped():
+    reg = MET.Registry("scoped")
+    g0 = MET.global_registry().counter_value("scope_test_total")
+    with MET.scope(reg):
+        MET.counter_inc("scope_test_total", 2)
+    MET.counter_inc("scope_test_total", 1)  # outside: global only
+    assert reg.counter_value("scope_test_total") == 2
+    assert MET.global_registry().counter_value("scope_test_total") == g0 + 3
+
+
+def test_ringlog_caps_but_counts_everything():
+    log = MET.RingLog(maxlen=3)
+    for i in range(10):
+        log.append(i)
+    assert log.items() == [7, 8, 9]
+    assert len(log) == 3
+    assert log.total_appended == 10
+    assert log.dropped == 7
+
+
+# ---------------------------------------------------------------------------
+# spans
+# ---------------------------------------------------------------------------
+
+
+def test_span_nesting_paths_and_depth():
+    with TR.span("outer") as so:
+        assert TR.current_span() is so
+        with TR.span("inner", detail=1) as si:
+            assert si.depth == 1
+            assert si.path == "outer/inner"
+            assert si.parent == "outer"
+        assert TR.current_span() is so
+    assert TR.current_span() is None
+    assert so.duration_ms >= 0.0
+
+
+def test_span_exception_safety():
+    with pytest.raises(ValueError, match="boom"):
+        with TR.span("exploder") as sp:
+            raise ValueError("boom")
+    # the stack unwound and the error was recorded on the span
+    assert TR.current_span() is None
+    assert "ValueError" in sp.error
+    ev = sp.as_event()
+    assert SCH.validate_event(ev, envelope=False) == []
+
+
+def test_span_attach_blocks_device_work():
+    with TR.span("attached") as sp:
+        out = sp.attach(jnp.ones((8, 8)) * 2.0)
+    assert float(out[0, 0]) == 2.0
+    assert sp.t1 is not None
+
+
+# ---------------------------------------------------------------------------
+# launch counters vs schedule contracts
+# ---------------------------------------------------------------------------
+
+
+def test_launch_counters_match_edm_schedule_contract():
+    from repro.kernels.tri_edm import ops as OE
+
+    n_rows, block = 64, 8
+    n = n_rows // block
+    x = np.random.default_rng(0).normal(size=(n_rows, 3)).astype(np.float32)
+    reg = MET.Registry("edm")
+    with MET.scope(reg):
+        OE.edm(x, block=block, impl="scan")
+    labels = {"name": "tri_edm.ltm", "impl": "scan"}
+    st = A.strategy_stats(n)["ltm"]
+    assert reg.counter_value("launches_total", labels) == 1
+    assert reg.counter_value("tiles_launched_total", labels) \
+        == st.launched == M.tri(n)
+    assert reg.counter_value("tiles_bb_total", labels) == n * n
+    assert reg.counter_value("tiles_wasted_total", labels) == st.wasted == 0
+
+
+def test_launch_counters_match_attention_schedule_contract():
+    from repro.kernels.tri_attn import ops as OPS
+
+    b, h, s, d, blk = 2, 3, 64, 8, 16
+    n = s // blk
+    q = np.zeros((b, h, s, d), np.float32)
+    reg = MET.Registry("attn")
+    with MET.scope(reg):
+        OPS.triangular_attention(q, q, q, impl="scan",
+                                 block_q=blk, block_k=blk)
+    labels = {"name": "tri_attn.fwd", "impl": "scan"}
+    # tiles multiply by cells = b*h (prefix grid dims)
+    assert reg.counter_value("tiles_launched_total", labels) \
+        == M.tri(n) * b * h
+    assert reg.counter_value("tiles_bb_total", labels) == n * n * b * h
+
+
+def test_kernel_summary_utilization_consistent_with_closed_forms():
+    from repro.kernels.tri_edm import ops as OE
+
+    n_rows, block = 48, 8
+    n = n_rows // block
+    x = np.zeros((n_rows, 2), np.float32)
+    reg = MET.Registry("summary")
+    with MET.scope(reg):
+        OE.edm(x, block=block, impl="scan")
+        OE.edm(x, block=block, impl="bb_scan")
+    summ = L.kernel_summary(reg)
+    ltm, bb = summ["tri_edm.ltm"], summ["tri_edm.bb"]
+    st = A.strategy_stats(n)
+    assert ltm["tiles_launched"] == st["ltm"].launched
+    assert ltm["utilization"] == 1.0
+    assert abs(ltm["improvement_vs_bb"]
+               - st["ltm"].block_ratio_vs_bb) < 1e-12
+    assert bb["tiles_launched"] == st["bb"].launched == n * n
+    assert abs(bb["utilization"] - (1.0 - st["bb"].waste_fraction)) < 1e-12
+    # the summary is trajectory-schema shaped
+    rec = [{"schema": SK.SCHEMA_VERSION, "created_unix": 0.0,
+            "kernels": summ}]
+    assert SCH.validate_trajectory(rec) == []
+
+
+def test_set_enabled_false_silences_launch_telemetry():
+    from repro.kernels.tri_edm import ops as OE
+
+    x = np.zeros((16, 2), np.float32)
+    reg = MET.Registry("off")
+    L.set_enabled(False)
+    try:
+        with MET.scope(reg):
+            OE.edm(x, block=8, impl="scan")
+    finally:
+        L.set_enabled(True)
+    assert reg.counter_total("launches_total") == 0
+
+
+# ---------------------------------------------------------------------------
+# sinks: trace JSONL + metrics.json schema round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_trace_jsonl_schema_roundtrip(tmp_path):
+    from repro.kernels.tri_edm import ops as OE
+
+    x = np.zeros((32, 2), np.float32)
+    trace_dir = tmp_path / "trace"
+    metrics_path = tmp_path / "metrics.json"
+    path = SK.enable(trace_dir=str(trace_dir),
+                     metrics_path=str(metrics_path), run_id="testrun")
+    try:
+        with TR.span("roundtrip") as sp:
+            sp.attach(OE.edm(x, block=8, impl="scan"))
+        written = SK.flush_metrics()
+    finally:
+        SK.disable()
+    assert path.endswith("trace-testrun.jsonl")
+    lines = [json.loads(ln) for ln in
+             open(path, encoding="utf-8").read().splitlines()]
+    assert len(lines) >= 2  # one launch + one span
+    types = {ev["type"] for ev in lines}
+    assert types == {"launch", "span"}
+    for ev in lines:
+        assert SCH.validate_event(ev) == [], ev
+    # seq is monotone from 1
+    assert [ev["seq"] for ev in lines] == list(range(1, len(lines) + 1))
+    # launch events are phase-tagged eager here (no jit in this test)
+    launch = next(ev for ev in lines if ev["type"] == "launch")
+    assert launch["phase"] == "eager"
+    assert launch["tiles_launched"] == M.tri(4)
+    doc = json.load(open(written, encoding="utf-8"))
+    assert SCH.validate_metrics(doc) == []
+    assert doc["run_id"] == "testrun"
+
+
+def test_emit_event_noop_when_disabled():
+    SK.disable()
+    before = MET.global_registry().counter_value("obs_events_written")
+    SK.emit_event({"type": "span", "name": "ghost", "path": "ghost",
+                   "depth": 0, "duration_ms": 0.0})
+    assert MET.global_registry().counter_value("obs_events_written") \
+        == before
+
+
+# ---------------------------------------------------------------------------
+# timing
+# ---------------------------------------------------------------------------
+
+
+def test_median_of_k_and_best_of():
+    calls = []
+
+    def fn(a):
+        calls.append(1)
+        return a + 1
+
+    t_med = TM.median_of_k(fn, jnp.zeros(()), reps=3, warmup=1)
+    assert t_med >= 0.0
+    assert len(calls) == 4  # 1 warmup + 3 timed
+    reg = MET.Registry("bench")
+    with MET.scope(reg):
+        TM.best_of(fn, jnp.zeros(()), reps=2, warmup=0, name="unit")
+    h = reg.histogram_value("bench_seconds", {"name": "unit"})
+    assert h["count"] == 2
+
+
+def test_benchmarks_util_is_a_shim():
+    import sys
+    sys.path.insert(0, ".")
+    try:
+        from benchmarks import _util
+    except ImportError:
+        pytest.skip("benchmarks package not importable from test cwd")
+    finally:
+        sys.path.pop(0)
+    assert _util.best_of is TM.best_of
+    assert _util.median_of_k is TM.median_of_k
+
+
+# ---------------------------------------------------------------------------
+# engine accounting: packed decode never launches more tiles than padded
+# ---------------------------------------------------------------------------
+
+
+def _engine_fixture(**kw):
+    from repro.configs import registry as REG
+    from repro.models import model as MD
+    from repro.serve.engine import Engine
+
+    cfg = REG.smoke_config("yi-9b")
+    params = MD.init_params(jax.random.key(0), cfg)
+    eng = Engine(params, cfg, slots=2, max_len=48, temperature=0.0, **kw)
+    return eng
+
+
+def test_engine_decode_tiles_packed_le_padded():
+    eng = _engine_fixture()
+    rng = np.random.default_rng(3)
+    for uid, s in enumerate((11, 3, 7)):
+        eng.submit(rng.integers(1, 50, size=s).astype(np.int32),
+                   max_new=4, uid=uid)
+    eng.run()
+    st = eng.stats
+    assert st["decode_rounds"] > 0
+    assert 0 < st["decode_tiles_packed"] <= st["decode_tiles_padded"]
+    # the same counters are mirrored into the process-global registry
+    g = MET.global_registry()
+    assert g.counter_value("engine_decode_tiles_packed") > 0
+
+
+def test_engine_stats_ringlog_caps_admit_logs():
+    eng = _engine_fixture(stats_log_rounds=2)
+    rng = np.random.default_rng(5)
+    for uid in range(6):
+        eng.submit(rng.integers(1, 50, size=4).astype(np.int32),
+                   max_new=2, uid=uid)
+    eng.run()
+    st = eng.stats
+    assert len(st["admit_round_tiles"]) <= 2
+    assert len(st["admit_order_log"]) <= 2
+    assert st["admit_rounds_total"] == st["admit_rounds"]
+    assert st["admit_log_dropped"] == \
+        st["admit_rounds_total"] - len(st["admit_round_tiles"])
+    assert st["admit_rounds"] >= 3  # 6 requests, 2 slots: >= 3 admit rounds
