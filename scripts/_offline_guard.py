@@ -68,15 +68,26 @@ def _guarded_getaddrinfo(host, *args, **kwargs):
     _violation("name resolution (getaddrinfo)", host)
 
 
-def pytest_configure(config):
+def install():
+    """Apply the guard (idempotent). Usable outside pytest too — the
+    resilience smoke tier calls this directly so its engine runs are
+    provably offline."""
     socket.socket.connect = _guarded_connect
     socket.socket.connect_ex = _guarded_connect_ex
     socket.socket.sendto = _guarded_sendto
     socket.getaddrinfo = _guarded_getaddrinfo
 
 
-def pytest_unconfigure(config):
+def uninstall():
     socket.socket.connect = _real_connect
     socket.socket.connect_ex = _real_connect_ex
     socket.socket.sendto = _real_sendto
     socket.getaddrinfo = _real_getaddrinfo
+
+
+def pytest_configure(config):
+    install()
+
+
+def pytest_unconfigure(config):
+    uninstall()

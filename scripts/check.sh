@@ -48,4 +48,11 @@ if [ "$#" -eq 0 ]; then
     echo "== obs validate (metrics.json / trajectory / trace) =="
     python -m repro.obs.validate artifacts/metrics.json \
         BENCH_trajectory.json artifacts/trace/*.jsonl
+    # Fault-injection smoke tier: the serving engine under seeded
+    # FaultPlans (launch errors, OOM admissions, poisoned tiles,
+    # stragglers) must stay token-identical to fault-free, with every
+    # degrade/quarantine schema-valid in the trace — run under the same
+    # no-network guard as the test suite (PYTHONPATH includes scripts).
+    echo "== resilience smoke (fault injection, offline) =="
+    python -m repro.resilience.smoke
 fi

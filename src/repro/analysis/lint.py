@@ -2,12 +2,14 @@
 
     PYTHONPATH=src python -m repro.analysis.lint [--json PATH] [--pass NAME]
 
-Runs the four static passes (envelope, contracts, jaxpr, obs), prints one line
-per check, and exits nonzero if any check fails. ``--json`` writes the full
-report (default path artifacts/lint_report.json when given without a
-value). Entirely offline: nothing here executes a kernel — mapping math
-runs on host ints, traced maps run as eager jnp scalar code, and ops are
-only abstractly traced / compiled-to-text.
+Runs the five passes (envelope, contracts, jaxpr, obs, resilience),
+prints one line per check, and exits nonzero if any check fails.
+``--json`` writes the full report (default path artifacts/lint_report.json
+when given without a value). Entirely offline: mapping math runs on host
+ints, traced maps run as eager jnp scalar code, ops are only abstractly
+traced / compiled-to-text — except the resilience pass, which RUNS the
+tiny smoke engine on CPU to prove fault-injected decode stays
+token-identical (the contract, not just its plumbing).
 """
 
 from __future__ import annotations
@@ -21,7 +23,7 @@ from typing import List
 
 from repro.analysis.contracts import CheckResult
 
-_PASSES = ("envelope", "contracts", "jaxpr", "obs")
+_PASSES = ("envelope", "contracts", "jaxpr", "obs", "resilience")
 
 
 def run_pass(name: str) -> List[CheckResult]:
@@ -33,6 +35,8 @@ def run_pass(name: str) -> List[CheckResult]:
         from repro.analysis import jaxpr_lint as mod
     elif name == "obs":
         from repro.analysis import obs_lint as mod
+    elif name == "resilience":
+        from repro.analysis import resilience_lint as mod
     else:
         raise SystemExit(f"unknown pass {name!r}; choose from {_PASSES}")
     return mod.run()

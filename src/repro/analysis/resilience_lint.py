@@ -1,0 +1,221 @@
+"""Resilience-contract lint — pass 5 of the block-space checker.
+
+The serving engine's failure handling is only trustworthy if its
+vocabulary and its behavior can't drift apart silently. Three rule
+groups:
+
+  vocabulary sync   the degradation-ladder registry
+                    (repro.resilience.faults.LADDERS) and the trace-event
+                    schema (repro.obs.schema.DEGRADE_STAGES) must name
+                    exactly the same stages, every registered transition
+                    must move strictly DOWN its ladder, and every
+                    resilience counter the engine emits (the
+                    ``_inc_res("...")`` literals in serve/engine.py) must
+                    be declared in schema.RESILIENCE_COUNTERS — and vice
+                    versa.
+  emission coverage AST walk over src/: ``degrade``/``quarantine`` trace
+                    events may only be emitted from serve/engine.py, and
+                    the engine's ``_degrade`` method must assert
+                    ``is_registered_transition`` before emitting — so an
+                    unregistered transition can never reach a trace file.
+  dynamic identity  run the tiny smoke engine on CPU under a forced
+                    FaultPlan (persistent admission OOM -> ladder
+                    descent; one decode poison -> quarantine + replay)
+                    and require the output token-identical to the
+                    fault-free run, with the degrade and quarantine
+                    counters actually firing. The resilience claim, not
+                    just its plumbing.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import List
+
+from repro.analysis.contracts import CheckResult
+
+
+def _res(rule, ok, detail=""):
+    return CheckResult(pass_name="resilience", rule=rule, ok=ok,
+                       detail=detail)
+
+
+def _repo_root() -> pathlib.Path:
+    return pathlib.Path(__file__).resolve().parents[3]
+
+
+# ---------------------------------------------------------------------------
+# vocabulary sync
+# ---------------------------------------------------------------------------
+
+
+def lint_vocab_sync() -> List[CheckResult]:
+    from repro.obs import schema as SCH
+    from repro.resilience import faults as F
+
+    out = []
+    ladder_stages = {s for ladder in F.LADDERS.values() for s in ladder}
+    out.append(_res(
+        "resilience.vocab.ladders_match_schema",
+        ladder_stages == set(SCH.DEGRADE_STAGES),
+        f"LADDERS stages {sorted(ladder_stages)} vs schema.DEGRADE_STAGES "
+        f"{sorted(SCH.DEGRADE_STAGES)} (must be identical sets)"))
+
+    bad = []
+    for phase, frm, to in F.TRANSITIONS:
+        ladder = F.LADDERS[phase]
+        if not (frm in ladder and to in ladder
+                and ladder.index(frm) < ladder.index(to)):
+            bad.append((phase, frm, to))
+        if not F.is_registered_transition(phase, frm, to):
+            bad.append(("unregistered", phase, frm, to))
+    out.append(_res(
+        "resilience.vocab.transitions_strictly_down",
+        not bad,
+        f"{len(F.TRANSITIONS)} transitions checked; violations: "
+        f"{bad or 'none'}"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# emission coverage (AST)
+# ---------------------------------------------------------------------------
+
+_ENGINE_REL = "src/repro/serve/engine.py"
+
+
+def _event_type_literals(call: ast.Call) -> List[str]:
+    """String values bound to a literal "type" key in a dict argument of
+    an emit_event(...) call."""
+    types = []
+    for arg in list(call.args) + [kw.value for kw in call.keywords]:
+        if not isinstance(arg, ast.Dict):
+            continue
+        for k, v in zip(arg.keys, arg.values):
+            if isinstance(k, ast.Constant) and k.value == "type" \
+                    and isinstance(v, ast.Constant):
+                types.append(str(v.value))
+    return types
+
+
+def lint_emission_coverage() -> List[CheckResult]:
+    root = _repo_root()
+    offenders = []
+    scanned = 0
+    for path in sorted((root / "src").rglob("*.py")):
+        rel = path.relative_to(root).as_posix()
+        scanned += 1
+        tree = ast.parse(path.read_text(encoding="utf-8"))
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.Call)
+                    and ((isinstance(node.func, ast.Attribute)
+                          and node.func.attr == "emit_event")
+                         or (isinstance(node.func, ast.Name)
+                             and node.func.id == "emit_event"))):
+                continue
+            for etype in _event_type_literals(node):
+                if etype in ("degrade", "quarantine") \
+                        and rel != _ENGINE_REL:
+                    offenders.append(f"{rel}:{node.lineno}:{etype}")
+    out = [_res(
+        "resilience.coverage.events_from_engine_only",
+        not offenders,
+        f"{scanned} files scanned; degrade/quarantine emitted outside "
+        f"{_ENGINE_REL}: {offenders or 'none'}")]
+
+    # _degrade must assert is_registered_transition before emitting, and
+    # every _inc_res literal must be a declared counter (and vice versa).
+    from repro.obs import schema as SCH
+
+    engine_src = (root / _ENGINE_REL).read_text(encoding="utf-8")
+    tree = ast.parse(engine_src)
+    guard_ok = False
+    inc_res: set = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef) and node.name == "_degrade":
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Assert):
+                    names = {n.attr for n in ast.walk(sub.test)
+                             if isinstance(n, ast.Attribute)}
+                    names |= {n.id for n in ast.walk(sub.test)
+                              if isinstance(n, ast.Name)}
+                    if "is_registered_transition" in names:
+                        guard_ok = True
+        if isinstance(node, ast.Call) \
+                and isinstance(node.func, ast.Attribute) \
+                and node.func.attr == "_inc_res" and node.args \
+                and isinstance(node.args[0], ast.Constant):
+            inc_res.add(str(node.args[0].value))
+    out.append(_res(
+        "resilience.coverage.degrade_guarded", guard_ok,
+        "_degrade asserts is_registered_transition before emitting"
+        if guard_ok else
+        "_degrade does NOT assert is_registered_transition"))
+    undeclared = inc_res - set(SCH.RESILIENCE_COUNTERS)
+    unemitted = set(SCH.RESILIENCE_COUNTERS) - inc_res
+    out.append(_res(
+        "resilience.coverage.counters_declared",
+        not undeclared and not unemitted,
+        f"engine emits {sorted(inc_res)}; undeclared: "
+        f"{sorted(undeclared) or 'none'}; declared-but-never-emitted: "
+        f"{sorted(unemitted) or 'none'}"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# dynamic token identity under a forced plan
+# ---------------------------------------------------------------------------
+
+
+def lint_dynamic_identity() -> List[CheckResult]:
+    import jax
+    import numpy as np
+
+    from repro.configs import registry as REG
+    from repro.models import model as MD
+    from repro.resilience import faults as F
+    from repro.serve.engine import Engine
+
+    cfg = REG.smoke_config("yi-9b")
+    params = MD.init_params(jax.random.key(0), cfg)
+    prompts = [np.array([3, 1, 4, 1], np.int32),
+               np.array([2, 7, 1], np.int32),
+               np.array([9, 8, 2, 6, 5], np.int32)]
+
+    def run(plan):
+        eng = Engine(params, cfg, slots=2, max_len=32, temperature=0.0,
+                     prefill_block=4, fault_plan=plan,
+                     clock=F.VirtualClock())
+        for uid, p in enumerate(prompts):
+            eng.submit(p, max_new=3, uid=uid)
+        return eng, eng.run()
+
+    _, baseline = run(None)
+    # 4 strikes outlast the default 3 retries -> forced ladder descent;
+    # the decode poison forces a quarantine + deterministic replay.
+    plan = F.FaultPlan([F.Fault("admit_oom", "admit", 0, times=4),
+                        F.Fault("poison", "decode", 1, times=1)])
+    eng, res = run(plan)
+    st = eng.stats
+    return [_res(
+        "resilience.dynamic.token_identity",
+        res == baseline and st["launches_degraded_total"] >= 1
+        and st["slots_quarantined_total"] >= 1
+        and st["requests_failed_total"] == 0,
+        f"faulted == fault-free: {res == baseline}; degraded="
+        f"{st['launches_degraded_total']} quarantined="
+        f"{st['slots_quarantined_total']} failed="
+        f"{st['requests_failed_total']}")]
+
+
+def run() -> List[CheckResult]:
+    out = []
+    for rule_fn in (lint_vocab_sync, lint_emission_coverage,
+                    lint_dynamic_identity):
+        try:
+            out.extend(rule_fn())
+        except Exception as e:  # a crash IS a lint failure
+            out.append(_res(f"resilience.{rule_fn.__name__}", False,
+                            f"exception: {type(e).__name__}: {e}"))
+    return out

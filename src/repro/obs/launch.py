@@ -39,6 +39,7 @@ from typing import Optional, Tuple
 from repro.obs import metrics as MET
 
 _ENABLED = True
+_LAUNCH_HOOK = None
 
 
 def set_enabled(flag: bool):
@@ -49,6 +50,22 @@ def set_enabled(flag: bool):
 
 def enabled() -> bool:
     return _ENABLED
+
+
+def set_launch_hook(hook):
+    """Install a pre-launch hook: ``hook(meta)`` runs before every
+    instrumented launch (Pallas or scan fallback) and may raise to abort
+    it — the injection surface for repro.resilience fault plans. Returns
+    the previously installed hook (None when there was none) so callers
+    can restore it. Under jit the hook fires at trace time, like the
+    telemetry emission itself."""
+    global _LAUNCH_HOOK
+    prev, _LAUNCH_HOOK = _LAUNCH_HOOK, hook
+    return prev
+
+
+def launch_hook():
+    return _LAUNCH_HOOK
 
 
 @dataclasses.dataclass(frozen=True)
@@ -197,7 +214,11 @@ def _operand_bytes(operands) -> int:
 
 
 def record_launch(meta: LaunchMeta, operands=()):
-    """Emit one launch's counters + trace event (no-op when disabled)."""
+    """Emit one launch's counters + trace event (no-op when disabled).
+    An installed launch hook runs FIRST and may raise to abort the launch
+    (deterministic fault injection — see repro.resilience.faults)."""
+    if _LAUNCH_HOOK is not None:
+        _LAUNCH_HOOK(meta)
     if not _ENABLED:
         return
     phase = "trace" if any(_is_tracer(x) for x in operands) else "eager"

@@ -11,7 +11,23 @@ from typing import List
 
 from repro.obs.sinks import SCHEMA_VERSION
 
-EVENT_TYPES = ("launch", "span")
+EVENT_TYPES = ("launch", "span", "degrade", "quarantine")
+
+# Canonical vocabulary of the serving degradation ladder (see
+# repro.resilience.faults.LADDERS — the resilience lint pass proves the
+# two stay in sync). ``degrade`` events may only move between these.
+DEGRADE_STAGES = ("packed", "packed_scan", "sequential", "lockstep",
+                  "traced", "host")
+
+# Resilience counters (emitted by serve/engine.py under these exact
+# names, globally and in the per-engine registry). Counts of discrete
+# events — validate_metrics requires them integral when present.
+RESILIENCE_COUNTERS = (
+    "requests_retried_total", "deadline_misses_total",
+    "launches_degraded_total", "requests_shed_total",
+    "slots_quarantined_total", "requests_failed_total",
+    "rounds_straggler_total",
+)
 
 # Required fields per event type (beyond the envelope added by sinks).
 _LAUNCH_FIELDS = {
@@ -23,6 +39,12 @@ _LAUNCH_OPTIONAL_INT = ("tiles_domain", "tiles_bb", "tiles_wasted")
 _LAUNCH_OPTIONAL_FLOAT = ("utilization", "improvement_vs_bb")
 _SPAN_FIELDS = {
     "name": str, "path": str, "depth": int, "duration_ms": (int, float),
+}
+_DEGRADE_FIELDS = {
+    "phase": str, "from": str, "to": str, "round": int, "reason": str,
+}
+_QUARANTINE_FIELDS = {
+    "slot": int, "uid": int, "round": int, "reason": str,
 }
 
 
@@ -76,6 +98,30 @@ def validate_event(ev: dict, *, envelope: bool = True) -> List[str]:
         for field, ftype in _SPAN_FIELDS.items():
             _check(errors, isinstance(ev.get(field), ftype),
                    f"span.{field} missing or not {ftype}: {ev.get(field)!r}")
+    elif etype == "degrade":
+        for field, ftype in _DEGRADE_FIELDS.items():
+            _check(errors, isinstance(ev.get(field), ftype),
+                   f"degrade.{field} missing or not {ftype}: "
+                   f"{ev.get(field)!r}")
+        if not errors:
+            _check(errors, ev["from"] in DEGRADE_STAGES,
+                   f"degrade.from not a registered stage: {ev['from']!r}")
+            _check(errors, ev["to"] in DEGRADE_STAGES,
+                   f"degrade.to not a registered stage: {ev['to']!r}")
+            _check(errors, ev["from"] != ev["to"],
+                   "degrade.from == degrade.to (not a transition)")
+            _check(errors, ev["round"] >= 0,
+                   f"degrade.round must be >= 0: {ev['round']!r}")
+    elif etype == "quarantine":
+        for field, ftype in _QUARANTINE_FIELDS.items():
+            _check(errors, isinstance(ev.get(field), ftype),
+                   f"quarantine.{field} missing or not {ftype}: "
+                   f"{ev.get(field)!r}")
+        if not errors:
+            _check(errors, ev["slot"] >= 0,
+                   f"quarantine.slot must be >= 0: {ev['slot']!r}")
+            _check(errors, ev["round"] >= 0,
+                   f"quarantine.round must be >= 0: {ev['round']!r}")
     return errors
 
 
@@ -96,6 +142,12 @@ def validate_metrics(doc: dict) -> List[str]:
     for name, v in (doc.get("counters") or {}).items():
         _check(errors, isinstance(v, (int, float)) and v >= 0,
                f"counter {name} must be non-negative number: {v!r}")
+        base = name.split("{", 1)[0]
+        if base in RESILIENCE_COUNTERS or \
+                base.removeprefix("engine_") in RESILIENCE_COUNTERS:
+            _check(errors, float(v) == int(v),
+                   f"resilience counter {name} must be integral "
+                   f"(counts discrete events): {v!r}")
     for name, h in (doc.get("histograms") or {}).items():
         if not isinstance(h, dict):
             errors.append(f"histogram {name} is not an object")

@@ -1,0 +1,25 @@
+"""repro.resilience — deterministic fault injection, health tracking, and
+crash-safe engine snapshots for the serving stack.
+
+Submodules (see README.md in this directory for the full tour):
+
+  faults    seeded ``FaultPlan`` (launch errors, NaN-poisoned outputs,
+            stragglers, OOM-style admission failures), ``VirtualClock``,
+            ``RetryPolicy`` (bounded exponential backoff + seeded jitter),
+            and the registered degradation-ladder ``TRANSITIONS``.
+  health    ``HeartbeatMonitor`` / straggler detection (moved here from
+            train/fault_tolerance.py, which re-exports) plus ``RoundWatch``
+            for flagging slow engine decode rounds.
+  snapshot  ``EngineSnapshot``: serialize slot table + KV cache + RNG/clock
+            state so ``Engine.restore(snap).run(...)`` resumes
+            token-identically after a crash.
+  smoke     CLI fault-injection smoke tier (``python -m
+            repro.resilience.smoke``), wired into scripts/check.sh.
+
+Everything is host-side and deterministic: every fault a plan injects is
+a pure function of (seed, phase, round, attempt), so a faulted run is
+bitwise-replayable offline on CPU — the same discipline
+train/fault_tolerance.py proves for training replay.
+"""
+
+from repro.resilience import faults, health, snapshot  # noqa: F401

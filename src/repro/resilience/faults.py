@@ -1,0 +1,314 @@
+"""Deterministic fault injection for the serving engine.
+
+A ``FaultPlan`` is a SEEDED, fully explicit list of faults: each fault
+names its kind, the engine phase it strikes ("admit" or "decode"), the
+phase-local round index, and how many times it fires before clearing (a
+transient fault with ``times=1`` succeeds on the first retry; a persistent
+fault with a large ``times`` forces the engine down the degradation
+ladder). Because matching is a pure function of (phase, round, attempt
+history), a faulted run is bitwise-replayable offline on CPU — the same
+discipline train/fault_tolerance.py proves for training replay.
+
+Fault kinds
+-----------
+  launch_error  the round's launch raises ``InjectedLaunchError`` — the
+                transient-infrastructure failure (driver hiccup, lost
+                device, preempted kernel).
+  admit_oom     the packed admission launch raises ``InjectedOOM`` — the
+                allocation-style failure whose correct mitigation is a
+                SMALLER footprint (the ladder degrades the round to the
+                sequential host path), not a blind retry forever.
+  poison        the round's output tile is NaN/Inf-corrupted. Injection
+                happens at the host boundary where outputs land (the same
+                place the engine's cheap finite-guard inspects them), so
+                detection -> quarantine -> deterministic re-prefill replay
+                is exercised end to end without un-deterministic device
+                state. Decode poison hits ``slot`` (-1 = first live slot);
+                admit poison corrupts the packed prefill states.
+  straggler     the round completes but takes ``delay_s`` longer — applied
+                through the engine's clock (advance a ``VirtualClock``, or
+                really sleep), so deadlines and ``RoundWatch`` straggler
+                flags observe it.
+
+Launch-level hook
+-----------------
+``install_launch_hook(plan)`` additionally registers the plan with
+``repro.obs.launch`` so EVERY instrumented launch (Pallas or scan
+fallback) consults it before running: faults with ``phase="launch"``
+raise at the launch site itself, matching on the launch's sequential
+index. Under jit the hook fires at trace time (once per compile) — the
+engine-phase hooks above are the per-round injection surface; the launch
+hook covers eager kernel paths and proves the wrapper is wrap-able.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+FAULT_KINDS = ("launch_error", "admit_oom", "poison", "straggler")
+PHASES = ("admit", "decode", "launch")
+
+
+class InjectedLaunchError(RuntimeError):
+    """A deterministic stand-in for a failed kernel launch."""
+
+
+class InjectedOOM(RuntimeError):
+    """A deterministic stand-in for an out-of-memory admission failure."""
+
+
+class PoisonedOutput(RuntimeError):
+    """Raised by the engine's finite-guard when a round's output tile
+    contains NaN/Inf (injected or real)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One injected fault occurrence.
+
+    ``round`` is phase-local (the engine counts admit and decode rounds
+    separately). ``times`` is the total number of strikes across retries
+    AND ladder stages before the fault clears. ``member`` scopes
+    admit-phase faults to one request of the round on the sequential
+    path (-1 = whole round, any member). ``slot`` scopes decode poison to
+    a batch row (-1 = first live slot). ``delay_s`` is the straggler
+    delay."""
+
+    kind: str
+    phase: str
+    round: int
+    times: int = 1
+    member: int = -1
+    slot: int = -1
+    delay_s: float = 0.0
+
+    def __post_init__(self):
+        assert self.kind in FAULT_KINDS, self.kind
+        assert self.phase in PHASES, self.phase
+        assert self.round >= 0 and self.times >= 1
+
+
+class FaultPlan:
+    """A seeded, replayable set of faults plus their strike bookkeeping.
+
+    The plan is consulted by the engine at its injection points:
+
+      delay = plan.maybe_fail(phase, round, member=...)   # may raise
+      slots = plan.poison_slots(round, live)              # decode poison
+      plan.poisons_admit(round)                           # admit poison
+
+    ``maybe_fail`` raises for error-kind faults, accumulates and returns
+    the straggler delay otherwise. Every match advances that fault's
+    strike count, so a fault fires exactly ``times`` times however the
+    engine interleaves retries and ladder stages. ``reset()`` re-arms
+    everything for a fresh replay of the same plan.
+    """
+
+    def __init__(self, faults: Sequence[Fault] = (), *, seed: int = 0):
+        self.faults: Tuple[Fault, ...] = tuple(faults)
+        self.seed = seed
+        self._fired: Dict[int, int] = {}
+        self._launch_calls = 0
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def random(cls, seed: int, *, n_rounds: int = 8, rate: float = 0.25,
+               kinds: Sequence[str] = FAULT_KINDS,
+               phases: Sequence[str] = ("admit", "decode"),
+               delay_s: float = 1.0) -> "FaultPlan":
+        """Generate a plan deterministically from ``seed``: each (phase,
+        round) cell independently faults with probability ``rate``."""
+        rng = np.random.default_rng(seed)
+        faults: List[Fault] = []
+        for phase in phases:
+            for rnd in range(n_rounds):
+                if rng.random() >= rate:
+                    continue
+                kind = str(rng.choice(list(kinds)))
+                if kind == "admit_oom" and phase != "admit":
+                    kind = "launch_error"
+                faults.append(Fault(
+                    kind=kind, phase=phase, round=rnd,
+                    times=int(rng.integers(1, 3)),
+                    delay_s=delay_s if kind == "straggler" else 0.0))
+        return cls(faults, seed=seed)
+
+    # -- bookkeeping ---------------------------------------------------------
+    def reset(self):
+        self._fired.clear()
+        self._launch_calls = 0
+
+    def _strike(self, idx: int) -> bool:
+        """True (and consume one strike) while fault idx has strikes left."""
+        fired = self._fired.get(idx, 0)
+        if fired >= self.faults[idx].times:
+            return False
+        self._fired[idx] = fired + 1
+        return True
+
+    def _matches(self, f: Fault, phase: str, rnd: int,
+                 member: Optional[int]) -> bool:
+        if f.phase != phase or f.round != rnd:
+            return False
+        if member is not None and f.member not in (-1, member):
+            return False
+        return True
+
+    # -- engine-phase injection points ---------------------------------------
+    def maybe_fail(self, phase: str, rnd: int, *,
+                   member: Optional[int] = None) -> float:
+        """Raise for error-kind faults matching this (phase, round,
+        member); return the summed straggler delay otherwise."""
+        delay = 0.0
+        for idx, f in enumerate(self.faults):
+            if f.kind == "poison" or not self._matches(f, phase, rnd, member):
+                continue
+            if f.kind == "straggler":
+                if self._strike(idx):
+                    delay += f.delay_s
+                continue
+            if self._strike(idx):
+                if f.kind == "admit_oom":
+                    raise InjectedOOM(
+                        f"injected OOM: {phase} round {rnd}")
+                raise InjectedLaunchError(
+                    f"injected launch failure: {phase} round {rnd}")
+        return delay
+
+    def poison_slots(self, rnd: int, live: Sequence[int]) -> List[int]:
+        """Decode-phase poison: batch rows whose logits this round's
+        injected corruption hits (resolved against the live set)."""
+        out: List[int] = []
+        for idx, f in enumerate(self.faults):
+            if f.kind != "poison" or f.phase != "decode" or f.round != rnd:
+                continue
+            slot = f.slot if f.slot >= 0 else (live[0] if live else -1)
+            if slot in live and slot not in out and self._strike(idx):
+                out.append(slot)
+        return out
+
+    def poisons_admit(self, rnd: int) -> bool:
+        """Admit-phase poison: whether this round's packed prefill states
+        come back NaN-corrupted."""
+        for idx, f in enumerate(self.faults):
+            if f.kind == "poison" and f.phase == "admit" \
+                    and f.round == rnd and self._strike(idx):
+                return True
+        return False
+
+    # -- launch-level hook ---------------------------------------------------
+    def on_launch(self, meta) -> None:
+        """obs.launch hook: consult phase="launch" faults, matching on the
+        sequential index of instrumented launches seen by this plan."""
+        idx = self._launch_calls
+        self._launch_calls += 1
+        for f_i, f in enumerate(self.faults):
+            if f.phase != "launch" or f.round != idx:
+                continue
+            if f.kind in ("launch_error", "admit_oom") and self._strike(f_i):
+                raise InjectedLaunchError(
+                    f"injected launch failure at launch #{idx} "
+                    f"({meta.name})")
+
+
+@contextlib.contextmanager
+def install_launch_hook(plan: FaultPlan):
+    """Register ``plan`` with repro.obs.launch for the dynamic extent of
+    the block, so every instrumented launch consults it."""
+    from repro.obs import launch as L
+
+    prev = L.set_launch_hook(plan.on_launch)
+    try:
+        yield plan
+    finally:
+        L.set_launch_hook(prev)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic time: virtual clock + seeded backoff
+# ---------------------------------------------------------------------------
+
+
+class VirtualClock:
+    """A monotone clock the engine can own: ``clock()`` reads it,
+    ``clock.sleep(dt)`` advances it instantly. Deadlines, backoff and
+    straggler delays all become deterministic functions of the plan."""
+
+    def __init__(self, start: float = 0.0):
+        self.t = float(start)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float):
+        assert dt >= 0.0
+        self.t += dt
+
+    sleep = advance
+
+
+@dataclasses.dataclass
+class RetryPolicy:
+    """Bounded retry with exponential backoff + seeded jitter.
+
+    ``delay(attempt)`` = base * factor^attempt * (1 + jitter * u) with u
+    drawn from a private seeded generator — the delay SEQUENCE is a pure
+    function of (seed, draw order), so backoff timing replays exactly
+    under a VirtualClock. ``cap_s`` bounds any single delay (important
+    when the engine really sleeps)."""
+
+    max_retries: int = 3
+    base_s: float = 0.005
+    factor: float = 2.0
+    jitter: float = 0.5
+    cap_s: float = 0.25
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.max_retries >= 0 and self.base_s >= 0.0
+        self._rng = np.random.default_rng(self.seed)
+
+    def delay(self, attempt: int) -> float:
+        u = float(self._rng.random())
+        d = self.base_s * (self.factor ** attempt) * (1.0 + self.jitter * u)
+        return min(d, self.cap_s)
+
+
+# ---------------------------------------------------------------------------
+# Degradation-ladder registry
+# ---------------------------------------------------------------------------
+
+# Per-phase ladders, ordered fastest -> most conservative. Stage names are
+# the canonical vocabulary of ``degrade`` trace events
+# (repro.obs.schema.DEGRADE_STAGES) and the resilience lint pass proves
+# every transition the engine emits is registered here AND moves strictly
+# down its ladder.
+LADDERS: Dict[str, Tuple[str, ...]] = {
+    # packed ragged prefill -> packed with scan kernels -> per-request
+    # sequential host path (the REC-style host fallback).
+    "admit": ("packed", "packed_scan", "sequential"),
+    # packed mixed-position decode -> lockstep pad-to-max einsum.
+    "decode": ("packed", "lockstep"),
+    # traced isqrt block mapping -> host-side mapping (taken when a round
+    # would exceed the certified LTM_TRACED_MAX_LAM envelope).
+    "map": ("traced", "host"),
+}
+
+TRANSITIONS: Tuple[Tuple[str, str, str], ...] = tuple(
+    (phase, ladder[i], ladder[j])
+    for phase, ladder in LADDERS.items()
+    for i in range(len(ladder))
+    for j in range(i + 1, len(ladder)))
+
+
+def is_registered_transition(phase: str, frm: str, to: str) -> bool:
+    """True iff (phase, frm, to) moves strictly DOWN a declared ladder.
+    The "map" ladder's transitions ride on the admit phase (the envelope
+    check happens at admission)."""
+    if (phase, frm, to) in TRANSITIONS:
+        return True
+    return phase == "admit" and ("map", frm, to) in TRANSITIONS

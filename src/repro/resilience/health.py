@@ -1,0 +1,116 @@
+"""Liveness and straggler detection, shared by training and serving.
+
+``WorkerHealth`` / ``HeartbeatMonitor`` moved here from
+train/fault_tolerance.py (which re-exports them — no API break): the
+monitor consumes (worker, step, timestamp) events from any transport and
+is deliberately host-side and deterministic, so it unit-tests on CPU and
+drops onto jax.distributed unchanged.
+
+``RoundWatch`` is the serving-side analogue for a SINGLE worker: the
+engine feeds it per-round wall-clock durations (measured on the engine's
+own clock, so injected straggler delays from a FaultPlan register) and it
+flags rounds slower than ``factor`` x the running median — the decode
+round's straggler signal, surfaced as the ``rounds_straggler_total``
+metric.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, Optional, Sequence, Set
+
+
+# ---------------------------------------------------------------------------
+# Heartbeats & stragglers (moved from train/fault_tolerance.py)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class WorkerHealth:
+    last_beat: Optional[float] = None
+    last_step: int = -1
+    step_times: deque = dataclasses.field(
+        default_factory=lambda: deque(maxlen=16))
+
+
+class HeartbeatMonitor:
+    """Tracks per-worker liveness and step latency.
+
+    failed(): no heartbeat for `timeout_s`.
+    stragglers(): recent mean step time > `straggler_factor` x fleet median —
+    the mitigation hook re-plans those workers' shards (deterministically)
+    rather than waiting on them.
+    """
+
+    def __init__(self, workers: Sequence[int], *, timeout_s: float = 60.0,
+                 straggler_factor: float = 1.5):
+        self.timeout_s = timeout_s
+        self.straggler_factor = straggler_factor
+        self.health: Dict[int, WorkerHealth] = {
+            w: WorkerHealth() for w in workers}
+
+    def beat(self, worker: int, step: int, now: Optional[float] = None):
+        now = time.monotonic() if now is None else now
+        h = self.health[worker]
+        if h.last_beat is not None and step > h.last_step:
+            h.step_times.append(
+                (now - h.last_beat) / max(1, step - h.last_step))
+        h.last_beat, h.last_step = now, step
+
+    def failed(self, now: Optional[float] = None) -> Set[int]:
+        now = time.monotonic() if now is None else now
+        return {w for w, h in self.health.items()
+                if h.last_beat is not None
+                and now - h.last_beat > self.timeout_s}
+
+    def stragglers(self) -> Set[int]:
+        means = {w: sum(h.step_times) / len(h.step_times)
+                 for w, h in self.health.items() if h.step_times}
+        if len(means) < 2:
+            return set()
+        med = sorted(means.values())[len(means) // 2]
+        return {w for w, m in means.items()
+                if m > self.straggler_factor * med}
+
+
+# ---------------------------------------------------------------------------
+# Single-worker round watch (serving decode rounds)
+# ---------------------------------------------------------------------------
+
+
+class RoundWatch:
+    """Flags straggler rounds against the engine's own recent history.
+
+    ``observe(duration_s)`` returns True when the round took more than
+    ``factor`` x the median of the last ``window`` rounds (needing at
+    least ``min_samples`` history first — cold-start rounds, which pay
+    JIT compiles, never flag). Purely host-side arithmetic: deterministic
+    given the observed durations, so fault-injected delays through a
+    VirtualClock produce reproducible straggler flags.
+    """
+
+    def __init__(self, *, factor: float = 3.0, window: int = 64,
+                 min_samples: int = 5):
+        assert factor > 1.0 and min_samples >= 2
+        self.factor = factor
+        self.min_samples = min_samples
+        self._durations: deque = deque(maxlen=window)
+        self.flagged = 0
+
+    def median(self) -> Optional[float]:
+        if not self._durations:
+            return None
+        s = sorted(self._durations)
+        return s[len(s) // 2]
+
+    def observe(self, duration_s: float) -> bool:
+        med = self.median()
+        slow = (len(self._durations) >= self.min_samples
+                and med is not None and med > 0.0
+                and duration_s > self.factor * med)
+        self._durations.append(duration_s)
+        if slow:
+            self.flagged += 1
+        return slow

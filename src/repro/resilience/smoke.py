@@ -1,0 +1,180 @@
+"""Fault-injection smoke tier.
+
+    PYTHONPATH=src:scripts python -m repro.resilience.smoke [--plans N]
+
+Runs the tiny smoke engine offline (the scripts/_offline_guard socket
+guard is installed when importable) under N seeded random FaultPlans and
+checks the resilience contract end to end:
+
+  * every request reaches exactly one terminal status — nothing is
+    silently dropped;
+  * every request that COMPLETES under faults is token-identical to the
+    fault-free baseline (greedy decode);
+  * a mid-run snapshot restores and finishes token-identically;
+  * the ``degrade`` / ``quarantine`` trace events written during the
+    faulted runs are schema-valid and move down registered ladders, and
+    the flushed metrics document (resilience counters included) passes
+    ``repro.obs.schema.validate_metrics``.
+
+Exit code 0 iff every check passes — scripts/check.sh gates on it, so
+the engine's failure handling cannot rot between the occasions someone
+actually pulls a cable.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+
+def _install_offline_guard() -> bool:
+    try:
+        import _offline_guard  # scripts/ on PYTHONPATH via check.sh
+    except ImportError:
+        return False
+    _offline_guard.install()
+    return True
+
+
+def _build():
+    import jax
+
+    from repro.configs import registry as REG
+    from repro.models import model as MD
+
+    cfg = REG.smoke_config("yi-9b")
+    params = MD.init_params(jax.random.key(0), cfg)
+    prompts = [np.array([3, 1, 4, 1, 5], np.int32),
+               np.array([2, 7, 1], np.int32),
+               np.array([9, 9, 8, 2, 6, 5], np.int32),
+               np.array([11, 2, 3, 5, 8, 13, 1], np.int32)]
+    return cfg, params, prompts
+
+
+def _run(cfg, params, prompts, *, plan=None, max_new=4):
+    from repro.resilience import faults as F
+    from repro.serve.engine import Engine
+
+    eng = Engine(params, cfg, slots=2, max_len=48, temperature=0.0,
+                 prefill_block=4, fault_plan=plan, clock=F.VirtualClock())
+    for uid, p in enumerate(prompts):
+        eng.submit(p, max_new=max_new, uid=uid)
+    return eng, eng.run()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.resilience.smoke",
+        description="offline fault-injection smoke for the serving engine")
+    ap.add_argument("--plans", type=int, default=3,
+                    help="number of seeded random FaultPlans (default 3)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--artifacts", default="artifacts",
+                    help="directory for the trace/metrics outputs")
+    args = ap.parse_args(argv)
+
+    guarded = _install_offline_guard()
+    print(f"offline guard: {'installed' if guarded else 'unavailable'}")
+
+    from repro.obs import metrics as MET
+    from repro.obs import schema as SCH
+    from repro.obs import sinks as SK
+    from repro.resilience import faults as F
+    from repro.resilience import snapshot as SNAP
+    from repro.serve.engine import Engine
+
+    failures = []
+
+    def check(ok, what):
+        print(("  ok   " if ok else "  FAIL ") + what)
+        if not ok:
+            failures.append(what)
+
+    cfg, params, prompts = _build()
+    trace_path = SK.enable(
+        trace_dir=os.path.join(args.artifacts, "trace"),
+        metrics_path=os.path.join(args.artifacts,
+                                  "metrics_resilience.json"),
+        run_id=f"resilience-smoke-{args.seed}")
+    try:
+        _, baseline = _run(cfg, params, prompts)
+        for i in range(args.plans):
+            plan = F.FaultPlan.random(args.seed + i, n_rounds=6, rate=0.5,
+                                      delay_s=0.01)
+            eng, res = _run(cfg, params, prompts, plan=plan)
+            rep = eng.report()
+            terminal = {"done", "shed", "deadline_miss", "failed"}
+            check(set(rep) == set(range(len(prompts)))
+                  and all(r["status"] in terminal for r in rep.values()),
+                  f"plan {i}: every request terminal: "
+                  f"{ {u: r['status'] for u, r in rep.items()} }")
+            done = [u for u, r in rep.items() if r["status"] == "done"]
+            check(all(res[u] == baseline[u] for u in done),
+                  f"plan {i}: {len(done)} completed requests "
+                  f"token-identical to fault-free")
+        # forced ladder descent + quarantine: 4 strikes outlast the
+        # default 3 retries (degrade event guaranteed), and one decode
+        # poison guarantees a quarantine + replay.
+        forced = F.FaultPlan([F.Fault("admit_oom", "admit", 0, times=4),
+                              F.Fault("poison", "decode", 1, times=1)])
+        eng, res = _run(cfg, params, prompts, plan=forced)
+        check(res == baseline and
+              eng.stats["launches_degraded_total"] >= 1 and
+              eng.stats["slots_quarantined_total"] >= 1,
+              "forced plan: degrade + quarantine fire, tokens identical")
+        # snapshot/restore mid-flight
+        eng = Engine(params, cfg, slots=2, max_len=48, temperature=0.0,
+                     prefill_block=4, clock=F.VirtualClock())
+        for uid, p in enumerate(prompts):
+            eng.submit(p, max_new=4, uid=uid)
+        eng._expire_deadlines()
+        eng._admit()
+        eng.step()
+        resumed = Engine.restore(SNAP.snapshot(eng)).run()
+        check(resumed == baseline,
+              "snapshot mid-flight -> restore -> run token-identical")
+        metrics_path = SK.flush_metrics()
+    finally:
+        SK.disable()
+
+    # the trace written above must validate, and every degrade must move
+    # down a registered ladder.
+    n_events = 0
+    with open(trace_path, encoding="utf-8") as fh:
+        for line in fh:
+            ev = json.loads(line)
+            if ev.get("type") not in ("degrade", "quarantine"):
+                continue
+            n_events += 1
+            errs = SCH.validate_event(ev)
+            if errs:
+                check(False, f"trace event invalid: {errs}")
+            if ev["type"] == "degrade" and not F.is_registered_transition(
+                    ev["phase"], ev["from"], ev["to"]):
+                check(False, f"unregistered degrade: {ev}")
+    check(n_events >= 1,
+          f"{n_events} degrade/quarantine events traced and validated")
+
+    with open(metrics_path, encoding="utf-8") as fh:
+        doc = json.load(fh)
+    errs = SCH.validate_metrics(doc)
+    check(not errs, f"metrics doc {metrics_path}: {errs or 'schema-valid'}")
+    present = [c for c in SCH.RESILIENCE_COUNTERS
+               if any(k.split("{", 1)[0] == c for k in doc["counters"])]
+    check(len(present) >= 2,
+          f"resilience counters present in metrics.json: {present}")
+    # engines also aggregate into the process-global registry
+    g = MET.global_registry()
+    check(g.counter_total("engine_decode_rounds") > 0,
+          "global registry carries engine_* counters")
+
+    print(f"resilience smoke: {len(failures)} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

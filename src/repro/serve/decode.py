@@ -23,12 +23,13 @@ instead of the lockstep einsum's pad-to-max B * S_cache.
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import mapping as M
 from repro.kernels.tri_attn import ops as attn_ops
 from repro.models import model as MD
 
@@ -90,6 +91,45 @@ def jit_generate(params, cfg, cache, first_tokens, start_pos, n_tokens,
                  key, temperature=0.0, top_k=None):
     return generate(params, cfg, cache, first_tokens, start_pos, n_tokens,
                     key=key, temperature=temperature, top_k=top_k)
+
+
+# ---------------------------------------------------------------------------
+# Output guards + traced-envelope check (request lifecycle hardening)
+# ---------------------------------------------------------------------------
+
+
+def poisoned_slots(logits_np: np.ndarray, live: Sequence[int]) -> List[int]:
+    """Cheap host-side NaN/Inf guard on a decode round's emitted logits:
+    the live batch rows whose logit vector contains a non-finite value
+    (a poisoned output tile). logits_np: (B, V) after squeezing the
+    length-1 axis. O(B*V) numpy — the detection cost the engine pays per
+    round so corruption becomes a quarantine instead of a silent garbage
+    token stream."""
+    return [s for s in live
+            if not bool(np.isfinite(logits_np[s]).all())]
+
+
+def states_finite(states) -> bool:
+    """NaN/Inf guard over packed prefill state leaves (float leaves only;
+    token/table int leaves can't be poisoned by arithmetic)."""
+    for leaf in jax.tree.leaves(states):
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            continue
+        if not bool(jnp.isfinite(leaf).all()):
+            return False
+    return True
+
+
+def traced_prefill_ok(lens: Sequence[int], block: int,
+                      max_lam: Optional[int] = None) -> bool:
+    """True iff every member of a packed admit round stays inside the
+    certified traced-isqrt envelope: the member's largest lambda is
+    tri(ceil(S_r / block)) - 1, which must be <= LTM_TRACED_MAX_LAM for
+    the traced block mapping to be exact. Beyond it the engine must take
+    the host-map (sequential) path — the traced -> host rung of the
+    degradation ladder."""
+    cap = M.LTM_TRACED_MAX_LAM if max_lam is None else max_lam
+    return all(M.tri(-(-int(s) // block)) - 1 <= cap for s in lens)
 
 
 # ---------------------------------------------------------------------------

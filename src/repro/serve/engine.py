@@ -24,11 +24,41 @@ This is the TPU-idiomatic middle ground between static batching and paged
 attention: contiguous per-slot caches (DMA-friendly, no page tables), with
 slot-level admission. Paged KV a la vLLM is GPU-pointer-chasing-shaped and
 intentionally NOT ported (DESIGN.md §2).
+
+Request lifecycle hardening (see src/repro/resilience/README.md)
+----------------------------------------------------------------
+Every round is allowed to FAIL. The engine then walks a declared
+degradation ladder instead of crashing:
+
+  admit   packed -> packed_scan -> sequential   (+ traced -> host when a
+          member would exceed the certified LTM_TRACED_MAX_LAM envelope)
+  decode  packed -> lockstep
+
+Each stage gets bounded retries with seeded exponential backoff + jitter
+(RetryPolicy); each ladder transition is asserted registered against
+repro.resilience.faults.LADDERS, counted in ``launches_degraded_total``,
+and emitted as a ``degrade`` trace event. Per-request deadlines/TTLs are
+checked every loop tick on the engine's clock (injectable — a
+VirtualClock makes the whole lifecycle deterministic under test);
+overload shedding reuses the tri(n) admission cost ordering and never
+sheds the queue head, so backpressure stays starvation-free. A cheap
+NaN/Inf guard inspects every round's emitted logits: a poisoned slot is
+QUARANTINED (``slots_quarantined_total`` + a ``quarantine`` trace event)
+and its request replayed deterministically — re-prefilled from
+prompt + tokens-already-emitted into a healthy slot, which reconstructs
+the exact pre-fault state because decode is deterministic (greedy decode
+therefore resumes token-identically; sampled decode stays replayable but
+quarantine reorders RNG-key consumption). A round that fails past the
+last ladder rung is attributed to the responsible request uids in
+stats["failures"] and the engine keeps serving the unaffected slots —
+every submitted request ends in exactly one terminal status
+(done / shed / deadline_miss / failed), never silently dropped.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional
 
 import jax
@@ -38,8 +68,13 @@ import numpy as np
 from repro.core import mapping as M
 from repro.models import model as MD
 from repro.obs import metrics as MET
+from repro.obs import schema as SCH
+from repro.obs import sinks as SK
 from repro.obs import trace as TR
+from repro.resilience import faults as F
+from repro.resilience import health as H
 from repro.serve import decode as D
+from repro.serve import kv_cache as KV
 
 
 @dataclasses.dataclass
@@ -49,6 +84,31 @@ class Request:
     max_new: int
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # lifecycle (terminal statuses: done | shed | deadline_miss | failed)
+    status: str = "queued"
+    deadline_s: Optional[float] = None
+    submitted_at: float = 0.0
+    replays: int = 0
+    error: Optional[str] = None
+
+    @property
+    def feed(self) -> np.ndarray:
+        """Tokens to prefill on (re)admission: the prompt plus everything
+        already emitted. Quarantine replay prefills on this to re-derive
+        the exact pre-fault cache state (decode is deterministic)."""
+        if not self.out:
+            return self.prompt
+        return np.concatenate([self.prompt,
+                               np.asarray(self.out, np.int32)])
+
+
+class EngineStepError(RuntimeError):
+    """A round failed past the last rung of its degradation ladder."""
+
+    def __init__(self, phase: str, rnd: int, cause: BaseException):
+        super().__init__(f"{phase} round {rnd} failed after retries and "
+                         f"degradation: {type(cause).__name__}: {cause}")
+        self.phase, self.round, self.cause = phase, rnd, cause
 
 
 class Engine:
@@ -60,7 +120,25 @@ class Engine:
                  prefill_block: int = 16, prefill_impl: str = "scan",
                  prefill_bucket: int = 0, decode_mode: str = "auto",
                  decode_block: int = 16, decode_impl: str = "scan",
-                 admit_order: str = "cost", stats_log_rounds: int = 1024):
+                 admit_order: str = "cost", stats_log_rounds: int = 1024,
+                 fault_plan: Optional[F.FaultPlan] = None, clock=None,
+                 retry: Optional[F.RetryPolicy] = None,
+                 deadline_s: Optional[float] = None,
+                 max_queue_tiles: int = 0, quarantine_rounds: int = 8,
+                 traced_max_lam: Optional[int] = None,
+                 guard_output: bool = True):
+        # ctor kwargs as REQUESTED (pre-downgrade), for snapshot/restore;
+        # fault_plan/clock/retry are runtime harness, supplied at restore.
+        self._init_kw = dict(
+            slots=slots, max_len=max_len, cache_dtype=cache_dtype,
+            temperature=temperature, seed=seed, prefill_mode=prefill_mode,
+            prefill_block=prefill_block, prefill_impl=prefill_impl,
+            prefill_bucket=prefill_bucket, decode_mode=decode_mode,
+            decode_block=decode_block, decode_impl=decode_impl,
+            admit_order=admit_order, stats_log_rounds=stats_log_rounds,
+            deadline_s=deadline_s, max_queue_tiles=max_queue_tiles,
+            quarantine_rounds=quarantine_rounds,
+            traced_max_lam=traced_max_lam, guard_output=guard_output)
         self.params, self.cfg = params, cfg
         self.B, self.max_len = slots, max_len
         self.cache = MD.init_cache(cfg, slots, max_len, cache_dtype)
@@ -112,6 +190,24 @@ class Engine:
         # order. The chosen order is exposed per round in stats.
         assert admit_order in ("cost", "fifo")
         self.admit_order = admit_order
+        # -- resilience harness ------------------------------------------
+        # clock is injectable: a resilience.faults.VirtualClock makes
+        # deadlines, backoff and straggler delays deterministic under
+        # test; anything with a .sleep(dt) method is "slept" through it.
+        self.clock = clock if clock is not None else time.monotonic
+        self.fault_plan = fault_plan
+        self.retry = retry if retry is not None else F.RetryPolicy(seed=seed)
+        self.default_deadline_s = deadline_s
+        self.max_queue_tiles = max_queue_tiles
+        self.quarantine_rounds = quarantine_rounds
+        self._traced_max_lam = (M.LTM_TRACED_MAX_LAM if traced_max_lam
+                                is None else traced_max_lam)
+        self.guard_output = guard_output
+        self.quarantined: Dict[int, int] = {}  # slot -> release round
+        self._rolling = cfg.sliding_window is not None
+        self._round_watch = H.RoundWatch()
+        self._admit_round_idx = 0
+        self._decode_round_idx = 0
         # observability: ONE packed launch per admit round (prefill) and
         # per decode round; prefill vs decode launches counted apart, plus
         # per-round tile accounting for the packed-vs-padded claim.
@@ -127,6 +223,7 @@ class Engine:
         # launch order; admit_round_tiles[r] its packed tile total.
         self._admit_order_log = MET.RingLog(maxlen=stats_log_rounds)
         self._admit_round_tiles = MET.RingLog(maxlen=stats_log_rounds)
+        self._failures = MET.RingLog(maxlen=stats_log_rounds)
         self._decode = jax.jit(
             lambda p, c, t, pos: MD.decode_step(p, cfg, c, t, pos))
 
@@ -143,6 +240,14 @@ class Engine:
         self.registry.counter_inc(name, value)
         MET.counter_inc("engine_" + name, value)
 
+    def _inc_res(self, name: str, value: int = 1):
+        """Resilience counters keep their CANONICAL *_total names in both
+        the per-engine registry and the process-global one — these are
+        the issue-facing names schema.RESILIENCE_COUNTERS declares and
+        metrics.json carries."""
+        self.registry.counter_inc(name, value)
+        MET.counter_inc(name, value)
+
     @property
     def stats(self) -> dict:
         """Read-only compat view of the registry-backed counters (the old
@@ -150,18 +255,169 @@ class Engine:
         does NOT feed back into the engine."""
         st = {name: int(self.registry.counter_value(name))
               for name in self._COUNTERS}
+        for name in SCH.RESILIENCE_COUNTERS:
+            st[name] = int(self.registry.counter_value(name))
         st["admit_order_log"] = self._admit_order_log.items()
         st["admit_round_tiles"] = self._admit_round_tiles.items()
         st["admit_rounds_total"] = self._admit_order_log.total_appended
         st["admit_log_dropped"] = self._admit_order_log.dropped
+        # per-step failures attributed to the responsible request uid
+        st["failures"] = self._failures.items()
         return st
 
+    def report(self) -> Dict[int, dict]:
+        """Explicit per-request lifecycle report. Every submitted request
+        appears with its status (queued / running / done / shed /
+        deadline_miss / failed), token count, replay count, and error —
+        shed and deadline-missed requests are REPORTED here, never
+        silently dropped."""
+        reqs = (list(self.finished)
+                + [r for r in self.slot_req if r is not None]
+                + list(self.queue))
+        return {r.uid: {"status": r.status, "tokens": len(r.out),
+                        "replays": r.replays, "error": r.error}
+                for r in reqs}
+
+    # -- resilience plumbing -------------------------------------------------
+    def _sleep(self, dt: float):
+        """Advance the injectable clock (VirtualClock.sleep) or really
+        sleep, capped so a mis-sized backoff cannot stall a live engine."""
+        if dt <= 0.0:
+            return
+        sleeper = getattr(self.clock, "sleep", None)
+        if sleeper is not None:
+            sleeper(dt)
+        else:
+            time.sleep(min(dt, self.retry.cap_s))
+
+    def _finish(self, req: Request, status: str,
+                error: Optional[str] = None):
+        req.status = status
+        req.done = True
+        req.error = error
+        self.finished.append(req)
+
+    def _record_failure(self, req: Request, phase: str, rnd: int,
+                        err: BaseException):
+        msg = f"{type(err).__name__}: {err}"
+        self._finish(req, "failed", error=msg)
+        self._inc_res("requests_failed_total")
+        self._failures.append({"uid": req.uid, "phase": phase,
+                               "round": rnd, "error": msg})
+
+    def _degrade(self, phase: str, rnd: int, frm: str, to: str,
+                 reason: str):
+        """One rung down the declared ladder: counted, traced, and
+        runtime-checked against the transition registry (an unregistered
+        transition is a bug — the resilience lint pass proves the
+        registry matches schema.DEGRADE_STAGES)."""
+        assert F.is_registered_transition(phase, frm, to), (
+            f"unregistered degradation {phase}: {frm} -> {to}; declare it "
+            f"in repro.resilience.faults.LADDERS")
+        self._inc_res("launches_degraded_total")
+        if SK.trace_enabled():
+            SK.emit_event({"type": "degrade", "phase": phase, "from": frm,
+                           "to": to, "round": rnd, "reason": reason[:200]})
+
+    def _attempt(self, fn, n_affected: int):
+        """Run one ladder stage with bounded retries + seeded backoff.
+        Returns (ok, result, err)."""
+        err: Optional[BaseException] = None
+        for attempt in range(self.retry.max_retries + 1):
+            try:
+                return True, fn(attempt), None
+            except Exception as e:  # noqa: BLE001 — hardening boundary
+                err = e
+                if attempt < self.retry.max_retries:
+                    self._inc_res("requests_retried_total", n_affected)
+                    self._sleep(self.retry.delay(attempt))
+        return False, None, err
+
+    def _run_ladder(self, phase: str, rnd: int, stages: List[str],
+                    runner, n_affected: int):
+        """Walk the phase's degradation ladder: bounded retries within a
+        stage, a registered degrade transition between stages. Returns
+        (result, stage) or raises EngineStepError carrying the cause."""
+        err: Optional[BaseException] = None
+        for si, stage in enumerate(stages):
+            ok, result, err = self._attempt(
+                lambda a, s=stage: runner(s, a), n_affected)
+            if ok:
+                return result, stage
+            if si + 1 < len(stages):
+                self._degrade(phase, rnd, stage, stages[si + 1],
+                              reason=f"{type(err).__name__}: {err}")
+        raise EngineStepError(phase, rnd, err)
+
     # -- admission -----------------------------------------------------------
-    def submit(self, prompt: np.ndarray, max_new: int, uid: int):
-        self.queue.append(Request(uid, np.asarray(prompt, np.int32), max_new))
+    def submit(self, prompt: np.ndarray, max_new: int, uid: int,
+               deadline_s: Optional[float] = None):
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.size == 0:
+            raise ValueError(f"request {uid}: empty prompt")
+        if prompt.size > self.max_len:
+            raise ValueError(
+                f"request {uid}: prompt of {prompt.size} tokens exceeds "
+                f"max_len={self.max_len} — its KV splice would overflow "
+                f"the slot cache (raise max_len or truncate)")
+        req = Request(uid, prompt, max_new,
+                      deadline_s=(self.default_deadline_s
+                                  if deadline_s is None else deadline_s),
+                      submitted_at=float(self.clock()))
+        self.queue.append(req)
+        self._shed_overload()
+
+    def _shed_overload(self):
+        """Overload shedding on the tri(n) cost ordering: while the
+        queue's packed-prefill tile total exceeds ``max_queue_tiles``,
+        shed the HEAVIEST request that is not the queue head. The aging
+        guarantee (the head always rides the next admit round) is what
+        keeps backpressure starvation-free — so the head is never shed,
+        however heavy, and shedding is deterministic in arrival order."""
+        if not self.max_queue_tiles:
+            return
+        while len(self.queue) > 1 and \
+                sum(self._prefill_tiles(r) for r in self.queue) \
+                > self.max_queue_tiles:
+            victim_i = max(range(1, len(self.queue)),
+                           key=lambda i: (self._prefill_tiles(self.queue[i]),
+                                          i))
+            victim = self.queue.pop(victim_i)
+            self._inc_res("requests_shed_total")
+            self._finish(victim, "shed", error=(
+                f"shed: queue over capacity ({self.max_queue_tiles} "
+                f"tiles) and this was the heaviest non-head request"))
+
+    def _expire_deadlines(self):
+        """TTL sweep on the engine clock: queued AND running requests past
+        their deadline are retired explicitly (status deadline_miss, the
+        tokens emitted so far preserved) — a request never occupies a
+        slot or a queue position beyond its deadline."""
+        now = float(self.clock())
+
+        def missed(req):
+            return req.deadline_s is not None and \
+                now - req.submitted_at > req.deadline_s
+
+        for req in [r for r in self.queue if missed(r)]:
+            self.queue.remove(req)
+            self._miss(req, now)
+        for slot in range(self.B):
+            req = self.slot_req[slot]
+            if req is not None and missed(req):
+                self.slot_req[slot] = None
+                self._miss(req, now)
+
+    def _miss(self, req: Request, now: float):
+        self._inc_res("deadline_misses_total")
+        self._finish(req, "deadline_miss", error=(
+            f"deadline {req.deadline_s}s exceeded after "
+            f"{now - req.submitted_at:.3f}s"))
 
     def _prefill_into_slot(self, slot: int, req: Request):
-        """Run the prompt through decode steps to fill the slot cache.
+        """Run the request's feed through decode steps to fill the slot
+        cache — the sequential HOST-map path (also the last rung of the
+        admit ladder and the traced-envelope fallback).
 
         Single-slot prefill via the decode path keeps the engine simple and
         exact; bulk prefill via prefill_cache covers the offline path. Other
@@ -174,7 +430,7 @@ class Engine:
             m = onehot.reshape((1, b) + (1,) * (new.ndim - 2))
             return jnp.where(m, new, old)
 
-        toks = req.prompt
+        toks = req.feed
         for t_idx, tok in enumerate(toks):
             tok_b = self.last_tok.at[slot, 0].set(int(tok))
             pos_b = self.pos.at[slot].set(t_idx)
@@ -185,60 +441,93 @@ class Engine:
             self.pos = pos_b
         self.pos = self.pos.at[slot].set(len(toks) - 1)
         self.slot_req[slot] = req
-        self.remaining[slot] = req.max_new
+        self.remaining[slot] = req.max_new - len(req.out)
         self._inc("prefill_launches", len(toks))
         self._inc("prefill_requests")
         self._inc("prefill_tokens", len(toks))
 
     def _splice_slot(self, slot: int, states, start: int, length: int):
-        """Copy one request's KV rows [start, start+length) out of the
-        packed prefill states into this slot's cache.
+        """Validated splice of one request's packed KV rows into a slot
+        cache — bounds checking lives in serve/kv_cache.splice_slot."""
+        self.cache = KV.splice_slot(self.cache, slot, states, start,
+                                    length, rolling=self._rolling)
 
-        KV leaves are (n_sl, 1, S_total, Hkv, hd) against a cache of
-        (n_sl, B, S_slots, Hkv, hd). Sliding-window caches are rolling
-        buffers (slot p % W holds position p): keep the last W rows and
-        roll them into decode's slot order, mirroring prefill_cache."""
-        def fill(c, st):
-            if not (c.ndim == 5 and st.ndim == 5):
-                return c  # non-KV leaf: unreachable on the packed path
-            s_slots = c.shape[2]
-            seg = st[:, 0, start:start + length]  # (n_sl, len, Hkv, hd)
-            if length > s_slots:
-                keep = seg[:, length - s_slots:]
-                keep = jnp.roll(keep, shift=length % s_slots, axis=1)
-                return c.at[:, slot, :s_slots].set(keep.astype(c.dtype))
-            return c.at[:, slot, :length].set(seg.astype(c.dtype))
+    def _admit_stages(self, rnd: int, reqs: List[Request]) -> List[str]:
+        """The admit round's degradation ladder, from the configured
+        fast path down to the sequential host path."""
+        if self.prefill_mode != "packed":
+            return ["sequential"]
+        if not D.traced_prefill_ok([len(r.feed) for r in reqs],
+                                   self.prefill_block,
+                                   self._traced_max_lam):
+            # certified-envelope guard: the traced isqrt block map is only
+            # exact up to LTM_TRACED_MAX_LAM; past it, take the host map.
+            self._degrade("admit", rnd, "traced", "host", reason=(
+                "member exceeds the certified traced-isqrt envelope "
+                f"(traced_max_lam={self._traced_max_lam})"))
+            return ["sequential"]
+        stages = ["packed"]
+        if self.prefill_impl == "pallas":
+            stages.append("packed_scan")
+        stages.append("sequential")
+        return stages
 
-        self.cache = jax.tree.map(fill, self.cache, states)
-
-    def _admit_batch(self, pairs):
+    def _admit_packed(self, pairs, rnd: int, impl: str):
         """Bulk admission: ONE packed ragged-prefill launch for every
-        (slot, request) pair, then per-slot KV splicing. Replaces the
-        O(sum of prompt lengths) sequential decode-step loop with a single
-        sum_r tri(n_r)-tile launch (see serve/decode.packed_prefill)."""
-        prompts = [req.prompt for _, req in pairs]
+        (slot, request) pair, then per-slot KV splicing — committed only
+        after the output guard passes, so a retried round never leaves
+        half-spliced state behind."""
+        if self.fault_plan is not None:
+            self._sleep(self.fault_plan.maybe_fail("admit", rnd))
+        prompts = [req.feed for _, req in pairs]
         with TR.span("engine.admit_batch", requests=len(pairs)) as sp:
             _, starts, lens, _, states = D.packed_prefill(
                 self.params, self.cfg, prompts, block=self.prefill_block,
-                attn_impl=self.prefill_impl, bucket=self.prefill_bucket)
+                attn_impl=impl, bucket=self.prefill_bucket)
             sp.attach(states)
+        if self.fault_plan is not None and \
+                self.fault_plan.poisons_admit(rnd):
+            # injected corruption lands at the host boundary the guard
+            # below inspects — the detection path is the real one.
+            states = jax.tree.map(
+                lambda x: jnp.full_like(x, jnp.nan)
+                if jnp.issubdtype(x.dtype, jnp.floating) else x, states)
+        if self.guard_output and not D.states_finite(states):
+            raise F.PoisonedOutput(
+                f"admit round {rnd}: non-finite packed prefill states")
+        # commit
         self._inc("prefill_launches")
         self._inc("prefill_requests", len(pairs))
         self._inc("prefill_tokens", sum(lens))
         for (slot, req), start, length in zip(pairs, starts, lens):
             self._splice_slot(slot, states, start, length)
             self.last_tok = self.last_tok.at[slot, 0].set(
-                int(req.prompt[-1]))
+                int(req.feed[-1]))
             self.pos = self.pos.at[slot].set(length - 1)
             self.slot_req[slot] = req
-            self.remaining[slot] = req.max_new
+            self.remaining[slot] = req.max_new - len(req.out)
+
+    def _admit_sequential(self, pairs, rnd: int):
+        """Per-request sequential prefill (host-map path): each request
+        is retried and, on exhaustion, failed INDIVIDUALLY — one bad
+        request cannot take down its round-mates."""
+        for member, (slot, req) in enumerate(pairs):
+            def one(attempt, s=slot, r=req, m=member):
+                if self.fault_plan is not None:
+                    self._sleep(self.fault_plan.maybe_fail(
+                        "admit", rnd, member=m))
+                self._prefill_into_slot(s, r)
+
+            ok, _, err = self._attempt(one, n_affected=1)
+            if not ok:
+                self._record_failure(req, "admit", rnd, err)
 
     def _prefill_tiles(self, req: Request) -> int:
         """Packed-prefill cost model for one request: tri(ceil(S / block))
         — exactly the blocks its member contributes to the admit round's
         packed grid (core/packing: num_blocks is the sum of member
-        triangles)."""
-        return M.tri(-(-len(req.prompt) // self.prefill_block))
+        triangles). S counts the feed (prompt + replayed tokens)."""
+        return M.tri(-(-len(req.feed) // self.prefill_block))
 
     def _pick_requests(self, take: int) -> List[Request]:
         """Pop ``take`` queued requests for this admit round.
@@ -268,29 +557,86 @@ class Engine:
             self.queue.pop(i)
         return reqs
 
+    def _release_quarantine(self):
+        """Return quarantined slots to service once their hold expires —
+        and immediately when the engine would otherwise deadlock (queue
+        waiting, nothing running, every slot quarantined)."""
+        rnd = self._decode_round_idx
+        for slot in [s for s, rel in list(self.quarantined.items())
+                     if rnd >= rel]:
+            del self.quarantined[slot]
+        if self.queue and self.quarantined \
+                and not any(r is not None for r in self.slot_req) \
+                and len(self.quarantined) >= self.B:
+            first = min(self.quarantined,
+                        key=lambda s: (self.quarantined[s], s))
+            del self.quarantined[first]
+
     def _admit(self):
-        free = [s for s in range(self.B) if self.slot_req[s] is None]
+        self._release_quarantine()
+        free = [s for s in range(self.B) if self.slot_req[s] is None
+                and s not in self.quarantined]
         take = min(len(free), len(self.queue))
         if not take:
             return
         reqs = self._pick_requests(take)
         pairs = list(zip(free, reqs))
+        for req in reqs:
+            req.status = "running"
         self._inc("admit_rounds")
         self._admit_order_log.append(
             [(r.uid, self._prefill_tiles(r)) for r in reqs])
         self._admit_round_tiles.append(
             sum(self._prefill_tiles(r) for r in reqs))
-        if self.prefill_mode == "packed":
-            self._admit_batch(pairs)
-        else:
+        rnd = self._admit_round_idx
+        self._admit_round_idx += 1
+        stages = self._admit_stages(rnd, reqs)
+
+        def runner(stage, attempt):
+            if stage == "sequential":
+                return self._admit_sequential(pairs, rnd)
+            impl = "scan" if stage == "packed_scan" else self.prefill_impl
+            return self._admit_packed(pairs, rnd, impl)
+
+        try:
+            self._run_ladder("admit", rnd, stages, runner,
+                             n_affected=len(pairs))
+        except EngineStepError as e:
+            # even the sequential rung raised for the whole round: fail
+            # every request of the round explicitly and keep serving.
             for slot, req in pairs:
-                self._prefill_into_slot(slot, req)
+                if self.slot_req[slot] is req:
+                    self.slot_req[slot] = None
+                self._record_failure(req, "admit", rnd, e.cause)
 
     # -- decode loop ---------------------------------------------------------
+    def _decode_stage(self, stage: str, rnd: int, live, kv_lens):
+        """One decode-round launch at a given ladder stage."""
+        if self.fault_plan is not None:
+            self._sleep(self.fault_plan.maybe_fail("decode", rnd))
+        if stage == "packed":
+            with TR.span("engine.decode_round", mode="packed",
+                         live=len(live)) as sp:
+                logits, cache, _ = D.decode_step_packed(
+                    self.params, self.cfg, self.cache, self.last_tok,
+                    self.pos, kv_lens, live, block=self.decode_block,
+                    impl=self.decode_impl)
+                sp.attach(logits)
+        else:
+            with TR.span("engine.decode_round", mode="lockstep",
+                         live=len(live)) as sp:
+                logits, cache = self._decode(self.params, self.cache,
+                                             self.last_tok, self.pos)
+                sp.attach(logits)
+        return logits, cache
+
     def step(self):
         """One decode round across all live slots — packed (mixed-position,
         each slot over its own valid KV prefix) when the batch is
-        position-skewed or has retired slots, lockstep otherwise."""
+        position-skewed or has retired slots, lockstep otherwise. Runs
+        under the decode degradation ladder; emitted logits pass the
+        NaN/Inf guard before any state commits, and poisoned slots are
+        quarantined + replayed instead of emitting garbage."""
         active = np.array([r is not None for r in self.slot_req])
         if not active.any():
             return
@@ -309,28 +655,65 @@ class Engine:
         self._inc("decode_rounds")
         self._inc("decode_tiles_packed", sum(tiles))
         self._inc("decode_tiles_padded", len(live) * max(tiles))
-        if use_packed:
-            with TR.span("engine.decode_round", mode="packed",
-                         live=len(live)) as sp:
-                logits, cache, _ = D.decode_step_packed(
-                    self.params, self.cfg, self.cache, self.last_tok,
-                    self.pos, kv_lens, live, block=self.decode_block,
-                    impl=self.decode_impl)
-                sp.attach(logits)
-            self._inc("decode_packed_launches")
-        else:
-            with TR.span("engine.decode_round", mode="lockstep",
-                         live=len(live)) as sp:
-                logits, cache = self._decode(self.params, self.cache,
-                                             self.last_tok, self.pos)
-                sp.attach(logits)
-            self._inc("decode_lockstep_launches")
+        rnd = self._decode_round_idx
+        self._decode_round_idx += 1
+        stages = ["packed", "lockstep"] if use_packed else ["lockstep"]
+        t0 = float(self.clock())
+        try:
+            (logits, cache), stage = self._run_ladder(
+                "decode", rnd, stages,
+                lambda s, a: self._decode_stage(s, rnd, live, kv_lens),
+                n_affected=len(live))
+        except EngineStepError as e:
+            # unrecoverable round: attribute the failure to every live
+            # request uid, free the slots, keep the engine serving.
+            for slot in live:
+                req = self.slot_req[slot]
+                self.slot_req[slot] = None
+                self._record_failure(req, "decode", rnd, e.cause)
+            return
+        self._inc("decode_packed_launches" if stage == "packed"
+                  else "decode_lockstep_launches")
+        dur = float(self.clock()) - t0
+        if self._round_watch.observe(dur):
+            self._inc_res("rounds_straggler_total")
+        # NaN/Inf guard at the host boundary (+ injected poison lands in
+        # the same place the guard inspects).
+        bad: List[int] = []
+        if self.guard_output or self.fault_plan is not None:
+            logits_np = np.array(logits[:, 0], np.float32)  # host copy
+            if self.fault_plan is not None:
+                for s in self.fault_plan.poison_slots(rnd, live):
+                    logits_np[s] = np.nan
+            if self.guard_output:
+                bad = D.poisoned_slots(logits_np, live)
+        replays: List[Request] = []
+        for slot in bad:
+            req = self.slot_req[slot]
+            self.slot_req[slot] = None
+            self.quarantined[slot] = rnd + 1 + self.quarantine_rounds
+            req.replays += 1
+            req.status = "queued"
+            replays.append(req)
+            self._inc_res("slots_quarantined_total")
+            if SK.trace_enabled():
+                SK.emit_event({"type": "quarantine", "slot": slot,
+                               "uid": req.uid, "round": rnd,
+                               "reason": "nonfinite_logits"})
+        if replays:
+            # front of the queue: the aging guarantee readmits replayed
+            # requests next round, prefilled on prompt + emitted tokens
+            # (Request.feed) into a healthy slot.
+            self.queue[0:0] = replays
         self.key, k = jax.random.split(self.key)
         nxt = D.sample_logits(k, logits[:, 0], temperature=self.temperature,
                               vocab_size=self.cfg.vocab_size)
         nxt_np = np.asarray(nxt)
         self.cache = cache
-        self.pos = self.pos + jnp.asarray(active, jnp.int32)
+        adv = active.copy()
+        for slot in bad:
+            adv[slot] = False  # quarantined: state reset at readmission
+        self.pos = self.pos + jnp.asarray(adv, jnp.int32)
         self.last_tok = nxt[:, None]
         for slot in range(self.B):
             req = self.slot_req[slot]
@@ -340,14 +723,37 @@ class Engine:
             self.remaining[slot] -= 1
             if self.remaining[slot] <= 0 or \
                     int(self.pos[slot]) >= self.max_len - 1:
-                req.done = True
-                self.finished.append(req)
+                self._finish(req, "done")
                 self.slot_req[slot] = None  # slot freed -> refilled next admit
 
     def run(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
+        """Drive admission + decode until drained (or max_steps rounds).
+
+        Returns {uid: tokens} for every request that reached a terminal
+        state — including the partial outputs of shed / deadline-missed /
+        failed requests (see report() for statuses). Per-step failures
+        never abort unaffected slots."""
         for _ in range(max_steps):
+            self._expire_deadlines()
             self._admit()
             if all(r is None for r in self.slot_req) and not self.queue:
                 break
             self.step()
         return {r.uid: r.out for r in self.finished}
+
+    # -- crash safety --------------------------------------------------------
+    def snapshot(self):
+        """Serialize slot table + KV cache + RNG/clock state into an
+        EngineSnapshot (resilience/snapshot.py)."""
+        from repro.resilience import snapshot as SNAP
+
+        return SNAP.snapshot(self)
+
+    @classmethod
+    def restore(cls, snap, **overrides):
+        """Rebuild an engine from an EngineSnapshot so run() resumes
+        token-identically after a crash (params/cfg ride in the snapshot;
+        pass fault_plan=/clock=/retry= overrides for the new process)."""
+        from repro.resilience import snapshot as SNAP
+
+        return SNAP.restore(snap, **overrides)

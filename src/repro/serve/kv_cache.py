@@ -21,12 +21,77 @@ from repro.models.model import init_cache  # re-export
 from repro.models.transformer import init_layer_cache  # re-export
 
 __all__ = ["init_cache", "init_layer_cache", "cache_bytes",
-           "cache_bytes_per_token"]
+           "cache_bytes_per_token", "splice_slot", "validate_splice"]
 
 
 def cache_bytes(cache) -> int:
     """Total bytes of a cache pytree (global, pre-sharding)."""
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+
+
+def validate_splice(cache, slot: int, start: int, length: int, *,
+                    rolling: bool = False):
+    """Bounds-check a packed-prefill -> slot-cache splice BEFORE any write.
+
+    Raises ValueError with an actionable message when the splice would
+    read outside the packed states or write outside the slot: an
+    over-length splice against a non-rolling cache would otherwise
+    silently truncate the prompt's KV (and an out-of-range slot index
+    would corrupt a NEIGHBORING request's cache — the worst serving bug
+    there is, because the victim's outputs go wrong, not the offender's).
+    """
+    if length <= 0:
+        raise ValueError(f"splice length must be positive, got {length} "
+                         f"(empty prompts are rejected at submit)")
+    if start < 0:
+        raise ValueError(f"splice start must be >= 0, got {start}")
+    for leaf in jax.tree.leaves(cache):
+        if leaf.ndim != 5:
+            continue  # non-KV leaf (recurrent state): not spliced
+        n_slots, s_slots = leaf.shape[1], leaf.shape[2]
+        if not 0 <= slot < n_slots:
+            raise ValueError(
+                f"splice slot {slot} out of range for a {n_slots}-slot "
+                f"cache — writing would corrupt slot {slot % n_slots}'s "
+                f"KV rows (a neighboring request)")
+        if length > s_slots and not rolling:
+            raise ValueError(
+                f"splice of {length} KV rows overflows the slot cache "
+                f"(S_slots={s_slots}, non-rolling): the request is longer "
+                f"than max_len — reject it at submit or raise max_len")
+
+
+def splice_slot(cache, slot: int, states, start: int, length: int, *,
+                rolling: bool = False):
+    """Copy one request's KV rows [start, start+length) out of packed
+    prefill ``states`` into ``slot`` of ``cache``, validated.
+
+    KV leaves are (n_sl, 1, S_total, Hkv, hd) against a cache of
+    (n_sl, B, S_slots, Hkv, hd). Rolling (sliding-window) caches are
+    rolling buffers (slot p % W holds position p): keep the last W rows
+    and roll them into decode's slot order. Returns the new cache pytree.
+    """
+    validate_splice(cache, slot, start, length, rolling=rolling)
+    for leaf in jax.tree.leaves(states):
+        if leaf.ndim == 5 and start + length > leaf.shape[2]:
+            raise ValueError(
+                f"splice [{start}, {start + length}) reads past the "
+                f"packed states (S_total={leaf.shape[2]}): start/length "
+                f"disagree with the packing — the rows would belong to "
+                f"the NEXT packed request")
+
+    def fill(c, st):
+        if not (c.ndim == 5 and st.ndim == 5):
+            return c  # non-KV leaf: unreachable on the packed path
+        s_slots = c.shape[2]
+        seg = st[:, 0, start:start + length]  # (n_sl, len, Hkv, hd)
+        if length > s_slots:
+            keep = seg[:, length - s_slots:]
+            keep = jnp.roll(keep, shift=length % s_slots, axis=1)
+            return c.at[:, slot, :s_slots].set(keep.astype(c.dtype))
+        return c.at[:, slot, :length].set(seg.astype(c.dtype))
+
+    return jax.tree.map(fill, cache, states)
 
 
 def cache_bytes_per_token(cfg, dtype=jnp.bfloat16) -> int:

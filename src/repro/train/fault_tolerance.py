@@ -23,55 +23,12 @@ from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 
 # ---------------------------------------------------------------------------
-# Heartbeats & stragglers
+# Heartbeats & stragglers — moved to repro.resilience.health (shared with
+# the serving engine's RoundWatch); re-exported here so existing imports
+# keep working.
 # ---------------------------------------------------------------------------
 
-
-@dataclasses.dataclass
-class WorkerHealth:
-    last_beat: Optional[float] = None
-    last_step: int = -1
-    step_times: deque = dataclasses.field(
-        default_factory=lambda: deque(maxlen=16))
-
-
-class HeartbeatMonitor:
-    """Tracks per-worker liveness and step latency.
-
-    failed(): no heartbeat for `timeout_s`.
-    stragglers(): recent mean step time > `straggler_factor` x fleet median —
-    the mitigation hook re-plans those workers' shards (deterministically)
-    rather than waiting on them.
-    """
-
-    def __init__(self, workers: Sequence[int], *, timeout_s: float = 60.0,
-                 straggler_factor: float = 1.5):
-        self.timeout_s = timeout_s
-        self.straggler_factor = straggler_factor
-        self.health: Dict[int, WorkerHealth] = {
-            w: WorkerHealth() for w in workers}
-
-    def beat(self, worker: int, step: int, now: Optional[float] = None):
-        now = time.monotonic() if now is None else now
-        h = self.health[worker]
-        if h.last_beat is not None and step > h.last_step:
-            h.step_times.append((now - h.last_beat) / max(1, step - h.last_step))
-        h.last_beat, h.last_step = now, step
-
-    def failed(self, now: Optional[float] = None) -> Set[int]:
-        now = time.monotonic() if now is None else now
-        return {w for w, h in self.health.items()
-                if h.last_beat is not None
-                and now - h.last_beat > self.timeout_s}
-
-    def stragglers(self) -> Set[int]:
-        means = {w: sum(h.step_times) / len(h.step_times)
-                 for w, h in self.health.items() if h.step_times}
-        if len(means) < 2:
-            return set()
-        med = sorted(means.values())[len(means) // 2]
-        return {w for w, m in means.items()
-                if m > self.straggler_factor * med}
+from repro.resilience.health import HeartbeatMonitor, WorkerHealth  # noqa: E402,F401
 
 
 # ---------------------------------------------------------------------------

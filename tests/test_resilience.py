@@ -1,0 +1,408 @@
+"""Resilience tests: deterministic fault injection, lifecycle hardening,
+degradation ladder, quarantine + replay, crash-safe snapshot/restore.
+
+The load-bearing assertion, repeated across the fault matrix: under any
+seeded FaultPlan the engine TERMINATES, every submitted request reaches
+exactly one explicit terminal status (no silent drops), and every request
+that completes is token-identical to the fault-free run (greedy decode).
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import registry as REG
+from repro.models import model as MD
+from repro.obs import schema as SCH
+from repro.obs import sinks as SK
+from repro.resilience import faults as F
+from repro.resilience import health as H
+from repro.resilience import snapshot as SNAP
+from repro.serve import kv_cache as KV
+from repro.serve.engine import Engine
+
+TERMINAL = {"done", "shed", "deadline_miss", "failed"}
+
+PROMPTS = [np.array([3, 1, 4, 1], np.int32),
+           np.array([2, 7, 1], np.int32),
+           np.array([9, 8, 2, 6, 5], np.int32)]
+MAX_NEW = 3
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    cfg = REG.smoke_config("yi-9b")
+    params = MD.init_params(jax.random.key(0), cfg)
+
+    def make(**kw):
+        kw.setdefault("clock", F.VirtualClock())
+        eng = Engine(params, cfg, slots=2, max_len=32, temperature=0.0,
+                     prefill_block=4, **kw)
+        for uid, p in enumerate(PROMPTS):
+            eng.submit(p, max_new=MAX_NEW, uid=uid)
+        return eng
+
+    def run(**kw):
+        eng = make(**kw)
+        return eng, eng.run()
+
+    _, baseline = run()
+    return {"cfg": cfg, "params": params, "make": make, "run": run,
+            "baseline": baseline}
+
+
+def _check_contract(eng, res, baseline):
+    """Termination + no silent drops + token identity for completions."""
+    rep = eng.report()
+    assert set(rep) == set(range(len(PROMPTS))), "request lost"
+    assert all(r["status"] in TERMINAL for r in rep.values()), rep
+    for uid, r in rep.items():
+        if r["status"] == "done":
+            assert res[uid] == baseline[uid], (uid, res[uid], baseline[uid])
+    return rep
+
+
+# ---------------------------------------------------------------------------
+# fault matrix: {kind} x {phase} x {decode mode}
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind,phase", [
+    ("launch_error", "admit"), ("admit_oom", "admit"),
+    ("poison", "admit"), ("straggler", "admit"),
+    ("launch_error", "decode"), ("poison", "decode"),
+    ("straggler", "decode"),
+])
+@pytest.mark.parametrize("decode_mode", ["auto", "lockstep"])
+def test_fault_matrix_token_identity(ctx, kind, phase, decode_mode):
+    """A transient fault (clears within the retry budget) must leave the
+    output indistinguishable from the fault-free run — all requests done,
+    none failed or dropped."""
+    plan = F.FaultPlan([F.Fault(kind, phase, 0, times=1, delay_s=0.01)])
+    eng, res = ctx["run"](fault_plan=plan, decode_mode=decode_mode)
+    rep = _check_contract(eng, res, ctx["baseline"])
+    assert all(r["status"] == "done" for r in rep.values()), rep
+    assert eng.stats["requests_failed_total"] == 0
+
+
+def test_retry_exhaustion_degrades_admit(ctx):
+    """4 strikes outlast the default 3 retries: the admit round must walk
+    the ladder (packed -> sequential), count the transition, and still
+    produce identical tokens."""
+    plan = F.FaultPlan([F.Fault("admit_oom", "admit", 0, times=4)])
+    eng, res = ctx["run"](fault_plan=plan)
+    _check_contract(eng, res, ctx["baseline"])
+    assert res == ctx["baseline"]
+    assert eng.stats["launches_degraded_total"] >= 1
+    assert eng.stats["requests_retried_total"] >= 1
+
+
+def test_retry_exhaustion_degrades_decode(ctx):
+    """Decode ladder: packed -> lockstep when the packed round keeps
+    failing (decode_mode="packed" so round 0 starts on the packed
+    grid — "auto" would pick lockstep for an unskewed first round)."""
+    plan = F.FaultPlan([F.Fault("launch_error", "decode", 0, times=4)])
+    eng, res = ctx["run"](fault_plan=plan, decode_mode="packed")
+    _check_contract(eng, res, ctx["baseline"])
+    assert res == ctx["baseline"]
+    assert eng.stats["launches_degraded_total"] >= 1
+    assert eng.stats["decode_lockstep_launches"] >= 1
+
+
+def test_ladder_exhaustion_attributes_failures(ctx):
+    """A fault that outlasts EVERY rung fails the round's requests
+    explicitly — attributed by uid in stats, engine keeps serving."""
+    plan = F.FaultPlan([F.Fault("launch_error", "decode", 0, times=99)])
+    eng, res = ctx["run"](fault_plan=plan)
+    rep = _check_contract(eng, res, ctx["baseline"])
+    failed = [u for u, r in rep.items() if r["status"] == "failed"]
+    assert failed, rep
+    assert eng.stats["requests_failed_total"] == len(failed)
+    blamed = {f["uid"] for f in eng.stats["failures"]}
+    assert set(failed) <= blamed
+    # the engine stayed alive: someone still finished, identically
+    done = [u for u, r in rep.items() if r["status"] == "done"]
+    assert done
+
+
+def test_member_scoped_fault_fails_one_request(ctx):
+    """On the sequential path a member-scoped persistent fault takes down
+    only ITS request; round-mates complete token-identically."""
+    plan = F.FaultPlan([F.Fault("launch_error", "admit", 0, member=1,
+                                times=99)])
+    eng, res = ctx["run"](fault_plan=plan, prefill_mode="sequential")
+    rep = _check_contract(eng, res, ctx["baseline"])
+    assert sum(r["status"] == "failed" for r in rep.values()) == 1
+    assert sum(r["status"] == "done" for r in rep.values()) == 2
+
+
+# ---------------------------------------------------------------------------
+# quarantine + replay
+# ---------------------------------------------------------------------------
+
+
+def test_poison_quarantines_and_replays(ctx):
+    """A poisoned decode round quarantines the slot, replays the request
+    from prompt + emitted tokens, and the final output is identical."""
+    plan = F.FaultPlan([F.Fault("poison", "decode", 1, times=1)])
+    eng, res = ctx["run"](fault_plan=plan)
+    rep = _check_contract(eng, res, ctx["baseline"])
+    assert res == ctx["baseline"]
+    assert eng.stats["slots_quarantined_total"] == 1
+    assert sum(r["replays"] for r in rep.values()) == 1
+
+
+def test_quarantine_never_deadlocks(ctx):
+    """Poison every early round on a 1-slot engine: with every slot
+    quarantined and work queued, the engine must force-release a slot
+    rather than spin forever."""
+    cfg, params = ctx["cfg"], ctx["params"]
+    plan = F.FaultPlan([F.Fault("poison", "decode", r, times=1)
+                        for r in range(3)])
+    eng = Engine(params, cfg, slots=1, max_len=32, temperature=0.0,
+                 prefill_block=4, fault_plan=plan, clock=F.VirtualClock(),
+                 quarantine_rounds=10_000)
+    eng.submit(PROMPTS[0], max_new=MAX_NEW, uid=0)
+    res = eng.run(max_steps=200)
+    assert eng.report()[0]["status"] == "done"
+    assert res[0] == ctx["baseline"][0]
+
+
+# ---------------------------------------------------------------------------
+# deadlines, shedding, stragglers
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_miss_is_explicit(ctx):
+    """A straggler delay past the TTL retires requests with an explicit
+    deadline_miss status (queued AND running), counted in metrics."""
+    plan = F.FaultPlan([F.Fault("straggler", "decode", 0, times=1,
+                                delay_s=2.0)])
+    eng, res = ctx["run"](fault_plan=plan, deadline_s=0.5)
+    rep = _check_contract(eng, res, ctx["baseline"])
+    missed = [u for u, r in rep.items() if r["status"] == "deadline_miss"]
+    assert missed
+    assert eng.stats["deadline_misses_total"] == len(missed)
+    assert all(rep[u]["error"] for u in missed)
+
+
+def test_overload_shedding_spares_the_head(ctx):
+    """Backpressure sheds the heaviest non-head request, explicitly; the
+    queue head (oldest) is never shed — the starvation-free guarantee."""
+    eng = ctx["make"](max_queue_tiles=2)
+    assert eng.stats["requests_shed_total"] == 1
+    rep = eng.report()
+    assert rep[0]["status"] != "shed"  # the head survived
+    res = eng.run()
+    rep = _check_contract(eng, res, ctx["baseline"])
+    shed = [u for u, r in rep.items() if r["status"] == "shed"]
+    assert len(shed) == 1 and shed[0] != 0
+    # shed requests appear in run() results with their (empty) output
+    assert res[shed[0]] == []
+
+
+def test_straggler_rounds_flagged():
+    w = H.RoundWatch(factor=3.0, min_samples=5)
+    for _ in range(8):
+        assert not w.observe(0.01)
+    assert w.observe(0.1)  # 10x the median
+    assert w.flagged == 1
+
+
+def test_retry_policy_is_seeded():
+    a = [F.RetryPolicy(seed=7).delay(i) for i in range(4)]
+    b = [F.RetryPolicy(seed=7).delay(i) for i in range(4)]
+    c = [F.RetryPolicy(seed=8).delay(i) for i in range(4)]
+    assert a == b != c
+    assert all(d <= F.RetryPolicy().cap_s for d in a)
+
+
+# ---------------------------------------------------------------------------
+# traced-envelope fallback
+# ---------------------------------------------------------------------------
+
+
+def test_envelope_fallback_to_host_map(ctx):
+    """With the certified traced-isqrt envelope artificially floored, the
+    admit round must degrade traced -> host (sequential prefill) and stay
+    token-identical."""
+    eng, res = ctx["run"](traced_max_lam=0)
+    _check_contract(eng, res, ctx["baseline"])
+    assert res == ctx["baseline"]
+    assert eng.stats["launches_degraded_total"] >= 1
+    # the packed launch counter stays 0: every admit went sequential
+    assert eng.stats["prefill_launches"] > eng.stats["admit_rounds"]
+
+
+# ---------------------------------------------------------------------------
+# snapshot / restore
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_restore_token_identical(ctx):
+    eng = ctx["make"]()
+    eng._expire_deadlines()
+    eng._admit()
+    eng.step()
+    eng.step()
+    snap = SNAP.snapshot(eng)
+    resumed = Engine.restore(snap).run()
+    assert resumed == ctx["baseline"]
+    # restoring twice from the same snapshot is also identical (the
+    # snapshot is a value, not a handle into the live engine)
+    assert Engine.restore(snap).run() == ctx["baseline"]
+
+
+def test_snapshot_file_roundtrip(ctx, tmp_path):
+    eng = ctx["make"]()
+    eng._expire_deadlines()
+    eng._admit()
+    eng.step()
+    snap = SNAP.snapshot(eng)
+    path = SNAP.to_dir(snap, str(tmp_path / "snap"))
+    loaded = SNAP.from_dir(path)
+    assert Engine.restore(loaded).run() == ctx["baseline"]
+    # crash-safety: a half-written .tmp is never visible as a snapshot
+    assert not (tmp_path / "snap.tmp").exists()
+
+
+@settings(max_examples=4)
+@given(cut=st.integers(min_value=0, max_value=5))
+def test_snapshot_any_cut_point(ctx, cut):
+    """Property: snapshotting after ANY number of decode rounds resumes
+    token-identically (the fault_tolerance.py replay discipline, ported
+    to serving)."""
+    eng = ctx["make"]()
+    eng._expire_deadlines()
+    eng._admit()
+    for _ in range(cut):
+        eng.step()
+    resumed = Engine.restore(SNAP.snapshot(eng)).run()
+    assert resumed == ctx["baseline"]
+
+
+@settings(max_examples=4)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_random_plans_uphold_contract(ctx, seed):
+    """Property: any seeded random FaultPlan leaves the engine terminated
+    with every request in a terminal status and completions identical."""
+    plan = F.FaultPlan.random(seed, n_rounds=6, rate=0.4, delay_s=0.01)
+    eng, res = ctx["run"](fault_plan=plan)
+    _check_contract(eng, res, ctx["baseline"])
+
+
+# ---------------------------------------------------------------------------
+# KV splice hardening
+# ---------------------------------------------------------------------------
+
+
+def _states_like(cache, s_total):
+    return jax.tree.map(
+        lambda x: jnp.zeros((x.shape[0], 1, s_total) + x.shape[3:],
+                            x.dtype) if x.ndim == 5 else x, cache)
+
+
+def test_kv_splice_overlength_raises(ctx):
+    cfg = ctx["cfg"]
+    cache = MD.init_cache(cfg, 2, 8, jnp.float32)
+    states = _states_like(cache, 32)
+    with pytest.raises(ValueError, match="longer than max_len"):
+        KV.splice_slot(cache, 0, states, 0, 32)
+
+
+def test_kv_splice_bad_slot_raises(ctx):
+    cfg = ctx["cfg"]
+    cache = MD.init_cache(cfg, 2, 8, jnp.float32)
+    states = _states_like(cache, 8)
+    with pytest.raises(ValueError, match="neighboring|NEIGHBORING"):
+        KV.splice_slot(cache, 5, states, 0, 4)
+
+
+def test_kv_splice_reads_past_packed_raises(ctx):
+    cfg = ctx["cfg"]
+    cache = MD.init_cache(cfg, 2, 8, jnp.float32)
+    states = _states_like(cache, 4)
+    with pytest.raises(ValueError, match="NEXT packed"):
+        KV.splice_slot(cache, 0, states, 2, 4)
+
+
+def test_submit_rejects_overlong_prompt(ctx):
+    eng = ctx["make"]()
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        eng.submit(np.arange(100, dtype=np.int32), max_new=1, uid=99)
+    with pytest.raises(ValueError, match="empty"):
+        eng.submit(np.array([], np.int32), max_new=1, uid=98)
+
+
+# ---------------------------------------------------------------------------
+# trace events + schema
+# ---------------------------------------------------------------------------
+
+
+def test_degrade_quarantine_events_schema_valid(ctx, tmp_path):
+    plan = F.FaultPlan([F.Fault("admit_oom", "admit", 0, times=4),
+                        F.Fault("poison", "decode", 1, times=1)])
+    trace_path = SK.enable(trace_dir=str(tmp_path), metrics_path=None,
+                           run_id="test-resilience")
+    try:
+        eng, res = ctx["run"](fault_plan=plan)
+    finally:
+        SK.disable()
+    assert res == ctx["baseline"]
+    kinds = {"degrade": 0, "quarantine": 0}
+    with open(trace_path, encoding="utf-8") as fh:
+        for line in fh:
+            ev = json.loads(line)
+            if ev.get("type") not in kinds:
+                continue
+            kinds[ev["type"]] += 1
+            assert SCH.validate_event(ev) == [], ev
+            if ev["type"] == "degrade":
+                assert F.is_registered_transition(
+                    ev["phase"], ev["from"], ev["to"]), ev
+    assert kinds["degrade"] >= 1 and kinds["quarantine"] >= 1
+
+
+def test_unregistered_transition_rejected_by_schema():
+    ev = {"type": "degrade", "phase": "decode", "from": "lockstep",
+          "to": "packed", "round": 0, "reason": "x"}
+    # schema accepts stage names but the registry rejects UP-ladder moves
+    assert SCH.validate_event(ev, envelope=False) == []
+    assert not F.is_registered_transition("decode", "lockstep", "packed")
+    bad = dict(ev, to="warp_drive")
+    assert SCH.validate_event(bad, envelope=False) != []
+
+
+def test_launch_hook_injects_at_launch_site():
+    """install_launch_hook wraps EVERY instrumented launch: a
+    phase="launch" fault raises at the matching sequential launch index
+    and clears after its strikes are spent."""
+    from repro.kernels.tri_edm import ops as OE
+
+    x = np.zeros((16, 4), np.float32)
+    plan = F.FaultPlan([F.Fault("launch_error", "launch", 1, times=1)])
+    with F.install_launch_hook(plan):
+        OE.edm(x, block=8, impl="scan")  # launch #0: clean
+        with pytest.raises(F.InjectedLaunchError):
+            OE.edm(x, block=8, impl="scan")  # launch #1: injected
+        OE.edm(x, block=8, impl="scan")  # strikes spent: clean again
+    # hook uninstalled on exit
+    plan.reset()
+    n = plan._launch_calls
+    OE.edm(x, block=8, impl="scan")
+    assert plan._launch_calls == n
+
+
+def test_resilience_counters_integral_in_metrics():
+    doc = {"schema": SK.SCHEMA_VERSION, "kind": "metrics",
+           "created_unix": 0.0,
+           "counters": {"requests_shed_total": 2.5},
+           "gauges": {}, "histograms": {}}
+    assert any("integral" in e for e in SCH.validate_metrics(doc))
+    doc["counters"]["requests_shed_total"] = 2
+    assert SCH.validate_metrics(doc) == []
