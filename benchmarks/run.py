@@ -11,6 +11,9 @@
                       lockstep pad-to-max at skew {1x, 4x, 16x}, and
                       --train: packed ragged-document fwd+bwd vs pad-to-max
                       training at document-length skew {1x, 4x, 16x}
+  bench_continuous  — continuous batching: the FUSED engine-step launch
+                      (admits + live decode slots, one mixed member table)
+                      vs the split prefill + decode pair at skew {1,4,16}
   bench_roofline    — §Roofline table from the dry-run artifacts (if present)
 
 --smoke is the CI tier: tiny n, scan impls only, seconds not minutes —
@@ -43,7 +46,7 @@ def main(argv=None):
     print(f"obs: trace -> {trace_path}")
 
     from benchmarks import bench_mapping, bench_tet_mapping, bench_edm, \
-        bench_attention, bench_packed, bench_roofline
+        bench_attention, bench_packed, bench_continuous, bench_roofline
 
     t0 = time.time()
     print("=" * 72)
@@ -125,6 +128,13 @@ def main(argv=None):
     bench_packed.main_train(
         smoke=args.smoke or args.fast,
         out_path="artifacts/bench_packed_train.json")
+
+    print("=" * 72)
+    print("bench_continuous (fused engine-step launch vs split pair)")
+    print("=" * 72)
+    bench_continuous.main(
+        smoke=args.smoke or args.fast,
+        out_path="artifacts/bench_continuous.json")
 
     print("=" * 72)
     print("bench_roofline (dry-run artifacts)")

@@ -40,6 +40,11 @@ if [ "$#" -eq 0 ]; then
     # assertion must keep executing offline.
     echo "== bench_packed --train --smoke =="
     python -m benchmarks.bench_packed --train --smoke
+    # And the fused continuous-batching step: its own CLI surface plus the
+    # 1-launch / fused == split tile assertions must keep executing
+    # offline (benchmarks.run --smoke covers the underlying run()).
+    echo "== bench_continuous --smoke =="
+    python -m benchmarks.bench_continuous --smoke
     # Telemetry smoke tier: the benchmarks.run --smoke above wrote
     # artifacts/metrics.json, a trace JSONL, and appended a record to
     # BENCH_trajectory.json — all three must be schema-valid

@@ -504,6 +504,102 @@ def _packed_contract() -> ScheduleContract:
     )
 
 
+def _mixed_recipe(total_rows: int):
+    """Deterministic continuous-batching recipe: ~2/3 of the tile rows go
+    to prefill members cycling ltm/band/prefix (never row), the remainder
+    to decode kv_tiles — the fused-step shape the engine launches."""
+    sizes = [3, 1, 4, 2, 7, 5]
+    kinds = ["ltm", "band", "prefix"]
+    pre_rows = max(1, (2 * total_rows) // 3)
+    prefill, rows, k = [], 0, 0
+    while rows < pre_rows:
+        n = min(sizes[k % len(sizes)] * (1 + k // len(sizes)),
+                pre_rows - rows) or 1
+        kind = kinds[k % len(kinds)]
+        if kind == "ltm":
+            prefill.append(S.TriangularSchedule(n=n))
+        elif kind == "band":
+            prefill.append(S.BandSchedule(n=n, w=max(1, n // 2)))
+        else:
+            prefill.append(S.PrefixSchedule(n=n, p=max(1, n // 3)))
+        rows += n
+        k += 1
+    kv_tiles, rem, k = [], total_rows - rows, 0
+    while rem > 0:
+        t = min(sizes[k % len(sizes)], rem)
+        kv_tiles.append(t)
+        rem -= t
+        k += 1
+    return tuple(prefill), tuple(kv_tiles)
+
+
+def _mixed_contract() -> ScheduleContract:
+    """Fused-step schedule kind: same member machinery as "packed" (the
+    mixed schedule IS a PackedSchedule), but the membership is the
+    continuous-batching shape — prefill members followed by decode row
+    members — declared as its own kind so the fused launch cannot ship
+    uncontracted."""
+    recipes = {label: _mixed_recipe(rows)
+               for label, rows in (("small", 9), ("mixed", 120),
+                                   ("n=10000", 10000))}
+
+    def members(case):
+        prefill, kv_tiles = recipes[case.label]
+        return prefill + tuple(S.RowSchedule(n=t) for t in kv_tiles)
+
+    def make(case):
+        prefill, kv_tiles = recipes[case.label]
+        return S.make_schedule("mixed", 0, prefill_members=prefill,
+                               kv_tiles=kv_tiles)
+
+    def launched(case):
+        return sum(_member_forms(m)[0] for m in members(case))
+
+    def segments(case):
+        base = 0
+        for r, m in enumerate(members(case)):
+            total, segs = _member_forms(m)
+            for origin, width, fj, lj, i in segs:
+                yield Segment(base + origin, width, (r, i, fj), (r, i, lj))
+            base += total
+
+    @functools.lru_cache(maxsize=None)
+    def bases(label):
+        prefill, kv_tiles = recipes[label]
+        ms = prefill + tuple(S.RowSchedule(n=t) for t in kv_tiles)
+        out, cur = [], 0
+        for m in ms:
+            out.append(cur)
+            cur += _member_forms(m)[0]
+        return tuple(out)
+
+    def in_domain(rij, case):
+        r, i, j = rij
+        ms = members(case)
+        if not (0 <= r < len(ms)) or not (0 <= i < ms[r].n):
+            return False
+        _, segs = _member_forms(ms[r])
+        _, _, fj, lj, _ = segs[i]
+        return fj <= j <= lj
+
+    def inverse(rij, case):
+        r, i, j = rij
+        ms = members(case)
+        origin, _, fj, _, _ = _member_forms(ms[r])[1][i]
+        return bases(case.label)[r] + origin + (j - fj)
+
+    return ScheduleContract(
+        kind="mixed", bijectivity=BIJECTION, rank=3,
+        make=make, launched=launched, domain=launched,
+        segments=segments, in_domain=in_domain, inverse=inverse,
+        cases=(
+            Case(label="small", n=9, exhaustive=True),
+            Case(label="mixed", n=120, exhaustive=True),
+            Case(label="n=10000", n=10000),
+        ),
+    )
+
+
 def _rec_contract() -> ScheduleContract:
     # MULTIPASS: verified by the dedicated engine in verifier.py
     # (pass-level counting + origin-square containment + small-n bitmap).
@@ -543,7 +639,7 @@ def schedule_contracts() -> Dict[str, ScheduleContract]:
         _ltm_contract(), _tet_contract(), _bb_contract(), _bb3_contract(),
         _band_contract(), _prefix_contract(), _row_contract(),
         _utm_contract(), _rb_contract(), _rec_contract(),
-        _packed_contract(),
+        _packed_contract(), _mixed_contract(),
     ]
     return {c.kind: c for c in contracts}
 
@@ -560,4 +656,4 @@ KIND_ALIASES = {
 # against the registry by construction attempts).
 REGISTERED_KINDS = ("ltm", "triangular", "tet", "tetrahedral", "bb",
                     "dense", "bb3", "dense3d", "band", "prefix", "row",
-                    "utm", "rb", "rec", "packed")
+                    "utm", "rb", "rec", "packed", "mixed")

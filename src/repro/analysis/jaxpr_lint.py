@@ -11,9 +11,12 @@ and enforces the launch-structure invariants the runtime tests cannot see:
                        regression; tri_edm / tri_3body entry points = 1.
   member tables        the scalar-prefetch tables are load-bearing ABI:
                        (7, R) int32 for packed prefill, (5, R) int32 for
-                       decode rounds, cumulative rows ascending from 0,
-                       and the decode pad member owning the garbage output
-                       row declared as (cur, n_slots, DECODE_NO_EMIT, 0, 0).
+                       decode rounds, (8, R) int32 for the fused
+                       continuous-batching step (kind row partitioning
+                       prefill columns before decode columns), cumulative
+                       rows ascending from 0, and the decode/fused pad
+                       member owning the garbage output row declared as
+                       (cur, n_slots, DECODE_NO_EMIT, 0, 0).
   capacity bucketing   decode grids must be power-of-two capacities
                        (recompile-hazard detection) and the decode launch
                        must carry the b+1-row output (pad garbage row).
@@ -288,6 +291,111 @@ def lint_tri_kernels() -> List[CheckResult]:
     ]
 
 
+def lint_fused_step() -> List[CheckResult]:
+    """Fused continuous-batching step: one mixed launch, (8, R) table ABI,
+    power-of-two decode bucket, garbage output row/tile — and, traced
+    through the whole model, exactly ONE pallas_call per engine step."""
+    from repro.core.mapping import INT32_MAX
+    from repro.kernels.tri_attn import kernel as K
+    from repro.kernels.tri_attn import ops as OPS
+    from repro.serve import decode as D
+
+    out = []
+    blk, s_cache, b = 4, 16, 3
+    psched = OPS.make_packed_sched([8, 4], block=blk)
+    r_p = len(psched.members)
+    kv_lens, slots = [5, 9], [0, 1]
+    n_members = r_p + b + 1
+    tbl, needed = OPS.make_fused_table(psched, kv_lens, slots, blk=blk,
+                                       n_members=n_members, n_slots=b,
+                                       s_cache=s_cache)
+    dec_cap = D.round_capacity(needed - psched.steps)
+    spec = OPS.FusedStepSpec(n_members=n_members,
+                             capacity=psched.steps + dec_cap, blk=blk,
+                             impl="pallas")
+    h, hkv, d = 4, 2, 8
+    qp = np.zeros((1, h, psched.s_total, d), np.float32)
+    kp = np.zeros((1, hkv, psched.s_total, d), np.float32)
+    qd = np.zeros((b, h, d), np.float32)
+    kc = np.zeros((b, s_cache, hkv, d), np.float32)
+    jx = _jaxpr_of(
+        lambda a, b_, c, e, f, g, t: OPS.fused_step_attention(
+            a, b_, c, e, f, g, t, psched, spec), qp, kp, kp, qd, kc, kc,
+        tbl)
+    pcs = find_eqns(jx, "pallas_call")
+    out.append(_res(
+        "jaxpr.fused_step.pallas_calls",
+        len(pcs) == 1 and count_primitive(jx, "scan") == 0,
+        f"fused pallas step: {len(pcs)} pallas_call (expect 1 — prefill "
+        f"AND decode members in one launch), "
+        f"{count_primitive(jx, 'scan')} scan (expect 0)"))
+
+    # per-kind garbage outputs: the pack output carries an extra garbage
+    # TILE (row n_pack_tiles), the decode output the pad garbage ROW b.
+    s_pack = psched.s_total
+    shapes = ([tuple(v.aval.shape) for v in pcs[0].outvars] if pcs else [])
+    out.append(_res(
+        "jaxpr.fused_step.garbage_outputs",
+        (1, h, s_pack + blk, d) in shapes and (b + 1, h, d) in shapes,
+        f"fused launch out avals {shapes} must include the pack buffer "
+        f"with its garbage tile {(1, h, s_pack + blk, d)} AND the decode "
+        f"buffer with its pad row {(b + 1, h, d)}"))
+
+    # (8, R) fused table ABI: kind row partitions prefill columns (0)
+    # before decode columns (1); starts cumulative from 0; the shared pad
+    # column is the decode pad member in fused row order.
+    pad_col = tuple(int(v) for v in tbl[:, -1])
+    expect_pad = (needed, 1, K.DECODE_NO_EMIT, 0, 0, b, 0, 0)
+    tbl_ok = (tbl.shape == (8, n_members) and tbl.dtype == np.int32
+              and int(tbl[0, 0]) == 0
+              and bool((np.diff(tbl[0]) >= 0).all())
+              and bool((tbl[1, :r_p] == 0).all())
+              and bool((tbl[1, r_p:] == 1).all())
+              and int(tbl[0, r_p]) == psched.steps
+              and pad_col == expect_pad
+              and K.DECODE_NO_EMIT > INT32_MAX // (2 * blk))
+    out.append(_res(
+        "jaxpr.fused_step.member_table", tbl_ok,
+        f"(8, R) int32 fused table: shape {tbl.shape} {tbl.dtype}; kind "
+        f"row {tbl[1].tolist()} partitions prefill|decode at {r_p}; pad "
+        f"column {pad_col} vs declared {expect_pad}"))
+
+    # decode half of the grid must stay power-of-two bucketed
+    out.append(_res(
+        "jaxpr.fused_step.capacity_pow2",
+        dec_cap >= needed - psched.steps and dec_cap & (dec_cap - 1) == 0
+        and spec.capacity == psched.steps + dec_cap,
+        f"fused capacity {spec.capacity} = {psched.steps} prefill steps + "
+        f"{dec_cap} decode bucket (power of two)"))
+    out.append(_res(
+        "jaxpr.fused_step.no_wide_dtypes", not wide_dtypes(jx),
+        f"f64/i64 avals: {wide_dtypes(jx) or 'none'}"))
+
+    # -- whole-model invariant: ONE pallas_call per engine step ---------
+    from repro.configs import registry as REG
+    from repro.models import model as MD
+
+    cfg = REG.smoke_config("yi-9b")
+    params = MD.init_params(jax.random.key(0), cfg)
+    cache = MD.init_cache(cfg, b, s_cache, jnp.float32)
+    pack_tokens = np.zeros((1, s_pack), np.int32)
+    pack_positions = np.zeros((s_pack,), np.int32)
+    dec_tokens = np.zeros((b, 1), np.int32)
+    pos = np.zeros((b,), np.int32)
+    admit_rows = np.asarray([7, 11], np.int32)
+    mj = _jaxpr_of(
+        lambda p_, c_, t: MD.fused_step(
+            p_, cfg, c_, pack_tokens, pack_positions, dec_tokens, pos,
+            psched, t, spec, admit_rows), params, cache, tbl)
+    n_pc = count_primitive(mj, "pallas_call")
+    out.append(_res(
+        "jaxpr.fused_step.one_launch_per_engine_step", n_pc == 1,
+        f"model fused_step jaxpr: {n_pc} pallas_call (expect exactly 1 — "
+        f"the superlayer scan body carries the single fused launch every "
+        f"engine step reuses)"))
+    return out
+
+
 def lint_hlo_scan_invariant() -> List[CheckResult]:
     """Compiled scan-path attention: the while loop's known trip count
     must equal the schedule's step count (reuses roofline/hlo_parse)."""
@@ -319,7 +427,7 @@ def lint_hlo_scan_invariant() -> List[CheckResult]:
 def run() -> List[CheckResult]:
     out = []
     for rule_fn in (lint_packed_prefill, lint_triangular_attention,
-                    lint_packed_decode, lint_tri_kernels,
+                    lint_packed_decode, lint_fused_step, lint_tri_kernels,
                     lint_hlo_scan_invariant):
         try:
             out.extend(rule_fn())

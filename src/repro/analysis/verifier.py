@@ -241,6 +241,10 @@ def verify_registry_coverage() -> List[C.CheckResult]:
         try:
             if k == "packed":
                 S.make_schedule(k, 0, members=(S.TriangularSchedule(n=2),))
+            elif k == "mixed":
+                S.make_schedule(
+                    k, 0, prefill_members=(S.TriangularSchedule(n=2),),
+                    kv_tiles=(3,))
             elif k == "rec":
                 S.make_schedule(k, 4, m=1)
             else:

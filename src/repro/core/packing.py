@@ -250,6 +250,31 @@ class PackedSchedule(BlockSchedule):
         triangle, applied to the decode batch."""
         return cls.from_members(RowSchedule(n=int(t)) for t in kv_tiles)
 
+    @classmethod
+    def mixed_step(cls, prefill_members, kv_tiles) -> "PackedSchedule":
+        """One CONTINUOUS-BATCHING engine step: newly admitted prompts
+        (triangular/band/prefix members) AND live decode slots (row
+        members) concatenated into a single 1-D grid.
+
+        This is the fused-step schedule kind ("mixed" in the registry):
+        the admit round and the decode round that today cost two grids
+        collapse into one launch of exactly
+        ``sum_r prefill_blocks_r + sum_s kv_tiles_s`` steps. Prefill
+        members come first (their tile rows own the packed operand), the
+        decode row members follow — the fused kernel routes each member's
+        output by kind (prefill members splice KV + emit last-row logits,
+        decode rows emit logits against the KV cache)."""
+        prefill_members = tuple(prefill_members)
+        for m in prefill_members:
+            if isinstance(m, RowSchedule):
+                raise ValueError(
+                    "mixed_step prefill members must be triangular/band/"
+                    "prefix (row members are the decode half)")
+        decode = tuple(RowSchedule(n=int(t)) for t in kv_tiles)
+        if not prefill_members and not decode:
+            raise ValueError("mixed_step needs at least one member")
+        return cls.from_members(prefill_members + decode)
+
     # -- static tables -------------------------------------------------------
     @property
     def num_requests(self) -> int:

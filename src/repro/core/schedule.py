@@ -445,6 +445,20 @@ def make_schedule(kind: str, n: int, **kw) -> BlockSchedule:
         if n not in (0, total):
             raise ValueError(f"packed n must be 0 or {total}, got {n}")
         return PackedSchedule(n=total, members=members, **kw)
+    if kind == "mixed":
+        # Continuous-batching fused step (core/packing.py mixed_step):
+        # prefill_members are the newly admitted prompts' rank-2 schedules,
+        # kv_tiles the live decode slots' KV prefixes in tiles; n is
+        # derived exactly like "packed".
+        from repro.core.packing import PackedSchedule
+
+        sched = PackedSchedule.mixed_step(kw.pop("prefill_members", ()),
+                                          kw.pop("kv_tiles", ()))
+        if kw:
+            raise TypeError(f"unexpected mixed kwargs: {sorted(kw)}")
+        if n not in (0, sched.n):
+            raise ValueError(f"mixed n must be 0 or {sched.n}, got {n}")
+        return sched
     kinds = {
         "ltm": TriangularSchedule,
         "triangular": TriangularSchedule,

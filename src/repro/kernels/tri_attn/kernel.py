@@ -809,6 +809,208 @@ def packed_decode_fwd(q, k, v, tbl, *, capacity: int, blk: int,
 
 
 # ---------------------------------------------------------------------------
+# FUSED continuous-batching step: ONE 1-D grid carrying newly admitted
+# prompts (prefill members over the packed operand) AND live decode slots
+# (row members over the KV cache) — the admit round and the decode round
+# collapse into a single launch (core/packing's mixed_step lifted to the
+# kernel). The unified (8, R) member table is RUNTIME data (decode
+# positions advance every round; the prefill columns are constants of the
+# compile but ride along so the whole grid shares one delegation):
+#   0 starts    cumulative grid-step offsets per member (ascending)
+#   1 kind      0 = prefill member, 1 = decode row member (incl. the pad)
+#   2 n         prefill: member tiles per side | decode: kv_tiles
+#               (DECODE_NO_EMIT for the pad member)
+#   3 w_b       prefill: band width in tiles  | decode: kv_len in tokens
+#   4 p_b       prefill: prefix width in tiles| decode: kv_first in tokens
+#   5 q_off     prefill: packed tile-row offset | decode: cache/query slot
+#   6 win       prefill window in tokens (0 = none) | decode: 0
+#   7 pre       prefill prefix in tokens (0 = none) | decode: 0
+# Output routing is per member KIND: prefill members emit their packed
+# hidden tiles into o_pack (whose last tile row is the garbage target of
+# every decode step), decode members emit their slot's row into o_dec
+# (whose row B is the garbage target of every prefill step and the pad).
+# ---------------------------------------------------------------------------
+
+
+def _fused_member(lam, tbl, n_members: int):
+    """lambda + (8, R) fused table -> (r, is_p, local, i_p, j_p).
+
+    One O(log R) search shared by body and index maps; the prefill
+    closed-form map runs on CLAMPED params (n=1, w=1, p=0, local=0) when
+    the member is a decode row, so rows 2-4 holding kv_{tiles,len,first}
+    can never overflow or divide inside the band/prefix delegation."""
+    from repro.core import packing as PK
+
+    r = PK.request_from_starts(lam, _TableRow(tbl, 0), n_members)
+    is_p = tbl[1, r] == 0
+    local = lam - tbl[0, r]
+    i_p, j_p = PK.member_map_params(
+        jnp.where(is_p, local, 0), jnp.where(is_p, tbl[2, r], 1),
+        jnp.where(is_p, tbl[3, r], 1), jnp.where(is_p, tbl[4, r], 0))
+    return r, is_p, local, i_p, j_p
+
+
+def _fused_step_kernel(tbl_ref, qp_ref, kp_ref, vp_ref, qd_ref, kc_ref,
+                       vc_ref, op_ref, od_ref, m_s, l_s, acc_s, *,
+                       n_members: int, blk: int, scale: float):
+    from repro.core import packing as PK
+
+    lam = pl.program_id(1)
+    r, is_p, local, i_p, j_p = _fused_member(lam, tbl_ref, n_members)
+    kv_tiles = tbl_ref[2, r]
+    kv_len = tbl_ref[3, r]
+    kv_first = jnp.where(is_p, 0, tbl_ref[4, r])
+    j_eff = jnp.where(is_p, j_p, local)
+    first = jnp.where(is_p, PK.first_col_params(i_p, tbl_ref[3, r]), 0)
+    last = jnp.where(is_p, PK.last_col_params(i_p, tbl_ref[4, r]),
+                     kv_tiles - 1)
+
+    @pl.when(j_eff == first)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, MASK_VALUE)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    # Decode rows broadcast their single query over the block: every row
+    # computes the same online softmax, and the emit takes row 0.
+    qp = qp_ref[0, 0].astype(jnp.float32)           # (blk, d)
+    qd = qd_ref[0].astype(jnp.float32)              # (1, d)
+    q = jnp.where(is_p, qp, jnp.broadcast_to(qd, qp.shape))
+    k = jnp.where(is_p, kp_ref[0, 0].astype(jnp.float32),
+                  kc_ref[0, :, 0, :].astype(jnp.float32))
+    v = jnp.where(is_p, vp_ref[0, 0].astype(jnp.float32),
+                  vc_ref[0, :, 0, :].astype(jnp.float32))
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pmask = _packed_token_mask(i_p, j_p, blk, tbl_ref[6, r], tbl_ref[7, r])
+    kpos = (kv_first // blk + jnp.where(is_p, 0, local)) * blk \
+        + jax.lax.broadcasted_iota(jnp.int32, (blk, blk), 1)
+    dmask = (kpos >= kv_first) & (kpos < kv_len)
+    s = jnp.where(jnp.where(is_p, pmask, dmask), s, MASK_VALUE)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_s[...] = l_s[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_s[...] = acc_s[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(is_p & (j_eff == last))
+    def _emit_pack():
+        op_ref[0, 0] = (acc_s[...] / l_s[...]).astype(op_ref.dtype)
+
+    @pl.when(jnp.logical_not(is_p) & (j_eff == last))
+    def _emit_dec():
+        od_ref[0] = (acc_s[0:1, :] / l_s[0:1, :]).astype(od_ref.dtype)
+
+
+def fused_step_fwd(q_pack, k_pack, v_pack, q_dec, k_cache, v_cache, tbl, *,
+                   capacity: int, blk: int, n_pack_tiles: int,
+                   sm_scale=None, interpret=True):
+    """One fused launch for a whole continuous-batching engine step.
+
+    q_pack: (1, H, S_pack, D) with k_pack/v_pack (1, Hkv, S_pack, D) — the
+    newly admitted prompts concatenated along S (the packed-prefill
+    layout); q_dec: (B, H, D) with k_cache/v_cache (B, S_cache, Hkv, D) —
+    the live slots' rotated queries against the native decode cache, new
+    token already written. tbl: the (8, R) fused member table
+    (ops.make_fused_table). Grid is (H, capacity): prefill blocks + live
+    decode tiles + masked pad steps — ONE pallas_call where the split
+    engine paid an admit launch and a decode launch. Returns
+
+      o_pack (1, H, S_pack + blk, D) — packed hidden tiles; the final blk
+             rows are the decode/pad steps' garbage tile, sliced off by
+             the caller;
+      o_dec  (B + 1, H, D) — per-slot decode rows; row B is the prefill/
+             pad steps' garbage row, masked by the caller via coverage.
+    """
+    _, h, s_pack, d = q_pack.shape
+    b = q_dec.shape[0]
+    s_cache, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    assert s_cache % blk == 0, (s_cache, blk)
+    assert s_pack == n_pack_tiles * blk, (s_pack, n_pack_tiles, blk)
+    cache_tiles = s_cache // blk
+    scale = float(sm_scale if sm_scale is not None else 1.0 / (d ** 0.5))
+    n_members = tbl.shape[1]
+
+    def qp_spec(h_, lam, tbl_):
+        r, is_p, _, i_p, _ = _fused_member(lam, tbl_, n_members)
+        return (0, h_, jnp.where(is_p, tbl_[5, r] + i_p, 0), 0)
+
+    def kp_spec(h_, lam, tbl_):
+        r, is_p, _, _, j_p = _fused_member(lam, tbl_, n_members)
+        return (0, h_ // g, jnp.where(is_p, tbl_[5, r] + j_p, 0), 0)
+
+    def qd_spec(h_, lam, tbl_):
+        r, is_p, _, _, _ = _fused_member(lam, tbl_, n_members)
+        slot = jnp.where(is_p, 0, tbl_[5, r])
+        return (jnp.minimum(slot, b - 1), h_, 0)
+
+    def kc_spec(h_, lam, tbl_):
+        r, is_p, local, _, _ = _fused_member(lam, tbl_, n_members)
+        slot = jnp.where(is_p, 0, tbl_[5, r])
+        kv_first = jnp.where(is_p, 0, tbl_[4, r])
+        j_d = jnp.where(is_p, 0, local)
+        return (jnp.minimum(slot, b - 1),
+                jnp.minimum(kv_first // blk + j_d, cache_tiles - 1),
+                h_ // g, 0)
+
+    def op_spec(h_, lam, tbl_):
+        # decode/pad steps park on the extra garbage tile row n_pack_tiles
+        r, is_p, _, i_p, _ = _fused_member(lam, tbl_, n_members)
+        return (0, h_, jnp.where(is_p, tbl_[5, r] + i_p, n_pack_tiles), 0)
+
+    def od_spec(h_, lam, tbl_):
+        # prefill steps (and the pad member, whose slot is n_slots) park on
+        # the garbage row b of the (B + 1)-row decode output
+        r, is_p, _, _, _ = _fused_member(lam, tbl_, n_members)
+        return (jnp.where(is_p, b, jnp.minimum(tbl_[5, r], b)), h_, 0)
+
+    kernel = functools.partial(_fused_step_kernel, n_members=n_members,
+                               blk=blk, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(h, capacity),
+        in_specs=[
+            pl.BlockSpec((1, 1, blk, d), qp_spec),
+            pl.BlockSpec((1, 1, blk, d), kp_spec),
+            pl.BlockSpec((1, 1, blk, d), kp_spec),
+            pl.BlockSpec((1, 1, d), qd_spec),
+            pl.BlockSpec((1, blk, 1, d), kc_spec),
+            pl.BlockSpec((1, blk, 1, d), kc_spec),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, blk, d), op_spec),
+            pl.BlockSpec((1, 1, d), od_spec),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((blk, 1), jnp.float32),
+            pltpu.VMEM((blk, 1), jnp.float32),
+            pltpu.VMEM((blk, d), jnp.float32),
+        ],
+    )
+    o_pack, o_dec = OBS.instrumented_pallas_call(
+        kernel,
+        meta=OBS.meta_exact(
+            "tri_attn.fused_step_fwd", "tri_attn", impl="pallas",
+            kind="fused_step", steps=capacity, block_shape=(blk, blk),
+            bb_bound=n_pack_tiles * n_pack_tiles + b * cache_tiles,
+            cells=h, extra=(("capacity", capacity),
+                            ("members", n_members))),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((1, h, s_pack + blk, d), q_pack.dtype),
+            jax.ShapeDtypeStruct((b + 1, h, d), q_dec.dtype),
+        ],
+        interpret=interpret,
+    )(tbl, q_pack, k_pack, v_pack, q_dec, k_cache, v_cache)
+    return o_pack, o_dec
+
+
+# ---------------------------------------------------------------------------
 # Backward: dq (row-major grid, same enumeration as forward)
 # ---------------------------------------------------------------------------
 

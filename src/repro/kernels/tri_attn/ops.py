@@ -309,6 +309,109 @@ def _masked_decode_einsum(q, k_cache, v_cache, valid, scale):
     return o.reshape(b, h, d).astype(q.dtype)
 
 
+# ---------------------------------------------------------------------------
+# Fused continuous-batching step (one launch: prefill members + decode rows)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedStepSpec:
+    """STATIC half of a fused continuous-batching step (hashable jit
+    static arg). One launch carries BOTH the round's newly admitted
+    prompts (triangular/band/prefix members over the packed operand) and
+    every live decode slot (single-row members over the KV cache). The
+    dynamic half is the (8, n_members) fused table from
+    ``make_fused_table``; capacity = psched.steps + the bucketed decode
+    capacity, so rounds sharing a packing template and a decode bucket
+    share one compiled program."""
+
+    n_members: int  # fused table width: prefill members + decode + pad
+    capacity: int   # static grid size >= prefill steps + live decode tiles
+    blk: int        # tile edge (divides S_pack and S_cache)
+    impl: str = "scan"
+
+
+def make_fused_table(psched: PackedTriSched, kv_lens, slots, *, blk: int,
+                     n_members: int, n_slots: int, s_cache: int = 0,
+                     window=None):
+    """Build one fused step's (8, n_members) int32 member table.
+
+    Prefill columns come first (one per psched member, translated from
+    the (7, R) packed-prefill table), then the decode columns
+    (make_decode_table rebased by psched.steps), then the shared pad
+    member. Row ABI (kernel.py `_fused_step_kernel`):
+
+      0 starts | 1 kind (0=prefill, 1=decode/pad) | 2 n|kv_tiles |
+      3 w_b|kv_len | 4 p_b|kv_first | 5 q_off|slot | 6 win|0 | 7 pre|0
+
+    Returns (table, needed_total) with needed_total = psched.steps +
+    live decode tiles — the minimum grid the round actually uses.
+    """
+    pt = np.asarray(psched.table())
+    r_p = pt.shape[1]
+    assert r_p >= 1, "fused step needs at least one prefill member"
+    assert all(m.bq == blk and m.bk == blk for m in psched.members), (
+        "fused step requires uniform square tiles == blk")
+    dt, needed_dec = make_decode_table(
+        list(kv_lens), list(slots), blk=blk, n_members=n_members - r_p,
+        n_slots=n_slots, s_cache=s_cache if len(list(kv_lens)) else 0,
+        window=window)
+    cols = []
+    for c in range(r_p):
+        t = pt[:, c]
+        cols.append((t[0], 0, t[2], t[3], t[4], t[1], t[5], t[6]))
+    for c in range(dt.shape[1]):
+        dc = dt[:, c]
+        cols.append((psched.steps + dc[0], 1, dc[2], dc[3], dc[4],
+                     dc[1], 0, 0))
+    return np.asarray(cols, np.int32).T.copy(), psched.steps + needed_dec
+
+
+def fused_step_attention(q_pack, k_pack, v_pack, q_dec, k_cache, v_cache,
+                         tbl, psched: PackedTriSched, spec: FusedStepSpec,
+                         *, sm_scale=None, interpret: bool = True):
+    """One attention launch for a whole continuous-batching engine step.
+
+    q_pack: (1, H, S_pack, D) packed admitted prompts (k_pack/v_pack
+    (1, Hkv, S_pack, D) their rotated keys/values); q_dec: (B, H, D) one
+    new token per slot; k_cache/v_cache: (B, S_cache, Hkv, D) with the
+    decode tokens already written. Prefill members attend
+    block-diagonally within the pack; decode members attend their own
+    valid cache prefix — all from ONE member table in one launch.
+    Returns (out_pack (1, H, S_pack, D), out_dec (B, H, D)); slots
+    without a live decode member return zeros.
+    """
+    b, h, d = q_dec.shape
+    s_pack = q_pack.shape[2]
+    scale = float(sm_scale if sm_scale is not None else 1.0 / (d ** 0.5))
+    assert tbl.shape == (8, spec.n_members), (tbl.shape, spec.n_members)
+    assert s_pack == psched.s_total, (s_pack, psched.s_total)
+    assert k_cache.shape[1] % spec.blk == 0, (k_cache.shape, spec.blk)
+    assert spec.capacity >= psched.steps, (spec.capacity, psched.steps)
+    if spec.impl == "pallas":
+        o_pack, o_dec = K.fused_step_fwd(
+            q_pack, k_pack, v_pack, q_dec, k_cache, v_cache, tbl,
+            capacity=spec.capacity, blk=spec.blk,
+            n_pack_tiles=s_pack // spec.blk, sm_scale=scale,
+            interpret=interpret)
+        covered = _fused_covered_slots(tbl, b)
+        return (o_pack[:, :, :s_pack],
+                jnp.where(covered[:, None, None], o_dec[:b], 0))
+    if spec.impl == "scan":
+        return SC.fused_step_scan(
+            q_pack, k_pack, v_pack, q_dec, k_cache, v_cache, tbl,
+            capacity=spec.capacity, blk=spec.blk,
+            n_members=spec.n_members, scale=scale)
+    raise ValueError(f"unknown impl {spec.impl!r}")
+
+
+def _fused_covered_slots(tbl, b):
+    """(B,) bool: slots owned by a live DECODE member of the fused table
+    (prefill columns scatter into the dropped extra row)."""
+    return jnp.zeros((b + 1,), bool).at[
+        jnp.where(tbl[1] == 1, tbl[5], b)].max(tbl[3] > 0)[:b]
+
+
 @functools.lru_cache(maxsize=None)
 def _pallas_attention(sched: TriSched, scale: float, interpret: bool):
     @jax.custom_vjp

@@ -26,6 +26,7 @@ from repro.kernels.tri_attn.kernel import (
     PackedTriSched,
     TriSched,
     _decode_member,
+    _fused_member,
     _packed_decode,
     _packed_token_mask,
     _token_mask,
@@ -374,6 +375,123 @@ def packed_decode_scan(q, k, v, tbl, *, capacity: int, blk: int,
     (_, _, _, out), _ = jax.lax.scan(
         step, init, jnp.arange(capacity, dtype=jnp.int32))
     return out
+
+
+def fused_step_scan(q_pack, k_pack, v_pack, q_dec, k_cache, v_cache, tbl, *,
+                    capacity: int, blk: int, n_members: int, scale: float):
+    """Fused continuous-batching step as one lax.scan (the CPU path).
+
+    Mirrors the fused Pallas kernel 1:1 — same (8, R) member table, same
+    per-kind output routing, same online-softmax order — vectorizing the H
+    axis in one pass. q_pack: (1, H, S_pack, D); k_pack/v_pack:
+    (1, Hkv, S_pack, D); q_dec: (B, H, D); k_cache/v_cache:
+    (B, S_cache, Hkv, D). Returns (out_pack (1, H, S_pack, D),
+    out_dec (B, H, D)) with uncovered pack rows / decode slots left zero.
+    """
+    _, h, s_pack, d = q_pack.shape
+    b = q_dec.shape[0]
+    s_cache, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    cache_tiles = s_cache // blk
+    n_pack_tiles = s_pack // blk
+    OBS.record_launch(
+        OBS.meta_exact("tri_attn.fused_step_fwd", "tri_attn",
+                       impl="scan", kind="fused_step", steps=capacity,
+                       block_shape=(blk, blk),
+                       bb_bound=n_pack_tiles * n_pack_tiles
+                       + b * cache_tiles, cells=h,
+                       extra=(("capacity", capacity),
+                              ("members", n_members))),
+        (q_pack, k_pack, v_pack, q_dec, k_cache, v_cache))
+
+    qpg = q_pack[0].reshape(hkv, g, s_pack, d)
+    kpg = k_pack[0]  # (hkv, s_pack, d)
+    vpg = v_pack[0]
+    qdg = q_dec.reshape(b, hkv, g, d)
+
+    def step(carry, lam):
+        m, l, acc, out_p, out_d = carry
+        r, is_p, local, i_p, j_p = _fused_member(lam, tbl, n_members)
+        kv_tiles = tbl[2, r]
+        kv_len = tbl[3, r]
+        kv_first = jnp.where(is_p, 0, tbl[4, r])
+        j_eff = jnp.where(is_p, j_p, local)
+        from repro.core import packing as PK
+
+        first = jnp.where(is_p, PK.first_col_params(i_p, tbl[3, r]), 0)
+        last = jnp.where(is_p, PK.last_col_params(i_p, tbl[4, r]),
+                         kv_tiles - 1)
+        reset = j_eff == first
+        m = jnp.where(reset, MASK_VALUE, m)
+        l = jnp.where(reset, 0.0, l)
+        acc = jnp.where(reset, 0.0, acc)
+
+        row_q = jnp.where(is_p, tbl[5, r] + i_p, 0)
+        row_k = jnp.where(is_p, tbl[5, r] + j_p, 0)
+        slot_c = jnp.minimum(jnp.where(is_p, 0, tbl[5, r]), b - 1)
+        j_d = jnp.where(is_p, 0, local)
+        j_c = jnp.minimum(kv_first // blk + j_d, cache_tiles - 1)
+
+        qp_t = jax.lax.dynamic_slice(
+            qpg, (0, 0, row_q * blk, 0),
+            (hkv, g, blk, d)).astype(jnp.float32)
+        qd_t = jax.lax.dynamic_slice(
+            qdg, (slot_c, 0, 0, 0), (1, hkv, g, d))[0].astype(
+            jnp.float32)[:, :, None, :]                    # (hkv, g, 1, d)
+        q = jnp.where(is_p, qp_t, jnp.broadcast_to(qd_t, qp_t.shape))
+        kp_t = jax.lax.dynamic_slice(
+            kpg, (0, row_k * blk, 0), (hkv, blk, d)).astype(jnp.float32)
+        vp_t = jax.lax.dynamic_slice(
+            vpg, (0, row_k * blk, 0), (hkv, blk, d)).astype(jnp.float32)
+        kc_t = jax.lax.dynamic_slice(
+            k_cache, (slot_c, j_c * blk, 0, 0),
+            (1, blk, hkv, d))[0].transpose(1, 0, 2).astype(jnp.float32)
+        vc_t = jax.lax.dynamic_slice(
+            v_cache, (slot_c, j_c * blk, 0, 0),
+            (1, blk, hkv, d))[0].transpose(1, 0, 2).astype(jnp.float32)
+        k = jnp.where(is_p, kp_t, kc_t)
+        v = jnp.where(is_p, vp_t, vc_t)
+
+        s = jnp.einsum("kgqd,ktd->kgqt", q, k,
+                       preferred_element_type=jnp.float32) * scale
+        pmask = _packed_token_mask(i_p, j_p, blk, tbl[6, r], tbl[7, r])
+        kpos = (kv_first // blk + j_d) * blk + jnp.arange(
+            blk, dtype=jnp.int32)
+        dmask = jnp.broadcast_to(
+            ((kpos >= kv_first) & (kpos < kv_len))[None, :], (blk, blk))
+        s = jnp.where(jnp.where(is_p, pmask, dmask)[None, None], s,
+                      MASK_VALUE)
+
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum(
+            "kgqt,ktd->kgqd", p, v, preferred_element_type=jnp.float32)
+
+        # Per-kind emit-gated routing (cf. packed_decode_scan): only a
+        # member's LAST column may touch an output, and only its own one.
+        norm = acc / l                                    # (hkv, g, blk, d)
+        upd_p = jax.lax.dynamic_update_slice(
+            out_p, norm.astype(out_p.dtype), (0, 0, row_q * blk, 0))
+        out_p = jnp.where(is_p & (j_eff == last), upd_p, out_p)
+        row0 = norm[:, :, 0, :].reshape(1, h, d)
+        upd_d = jax.lax.dynamic_update_slice(
+            out_d, row0.astype(out_d.dtype), (slot_c, 0, 0))
+        out_d = jnp.where(jnp.logical_not(is_p) & (j_eff == last), upd_d,
+                          out_d)
+        return (m_new, l, acc, out_p, out_d), None
+
+    init = (
+        jnp.full((hkv, g, blk, 1), MASK_VALUE, jnp.float32),
+        jnp.zeros((hkv, g, blk, 1), jnp.float32),
+        jnp.zeros((hkv, g, blk, d), jnp.float32),
+        jnp.zeros((hkv, g, s_pack, d), q_pack.dtype),
+        jnp.zeros((b, h, d), q_dec.dtype),
+    )
+    (_, _, _, out_p, out_d), _ = jax.lax.scan(
+        step, init, jnp.arange(capacity, dtype=jnp.int32))
+    return out_p.reshape(1, h, s_pack, d), out_d
 
 
 def _dq_cell(q, k, v, do, lse, delta, sched: TriSched, scale):

@@ -44,3 +44,34 @@ def make_mesh(axis_shapes, axis_names, *, devices=None):
     if axis_types is not None:
         kwargs["axis_types"] = axis_types
     return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# HLO op_name spellings of kernel-fusable regions
+# ---------------------------------------------------------------------------
+
+# The roofline HLO walk identifies "kernel interiors" — regions with a
+# Pallas twin in kernels/ — by op_name metadata. Two sources:
+#  * the scan-attention cell, the only model code shaped as
+#    vmap(vmap(<cell with lax.scan>)); its op_name spelling differs across
+#    JAX versions: "vmap(vmap())/.../while" on newer JAX,
+#    "vmap(vmap(while))" on 0.4.x — BOTH spellings must stay matched, and
+#  * explicit jax.named_scope markers placed around scan fallbacks
+#    (ssm_scan for the mamba recurrence, wkv for rwkv, tri_attn).
+# One tested table; every consumer builds its regex from here so a JAX
+# upgrade that reshuffles one spelling fails a single pinned test instead
+# of silently zeroing the interior-bytes column.
+KERNEL_REGION_OP_NAME_SPELLINGS = (
+    r"vmap\(vmap\(\)\)[^\"]*while",   # newer JAX: vmap(vmap())/.../while
+    r"vmap\(vmap\(while\)\)",         # JAX 0.4.x: collapsed spelling
+    r"ssm_scan_kernel",
+    r"wkv_scan_kernel",
+    r"tri_attn_kernel",
+)
+
+
+def kernel_region_regex():
+    """Compiled alternation over KERNEL_REGION_OP_NAME_SPELLINGS."""
+    import re
+
+    return re.compile("|".join(KERNEL_REGION_OP_NAME_SPELLINGS))

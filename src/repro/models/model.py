@@ -195,6 +195,40 @@ def decode_step(params, cfg, cache, tokens, pos, decode_tbl=None,
     return logits_from_hidden(params, cfg, x), new_cache
 
 
+def fused_step(params, cfg, cache, pack_tokens, pack_positions, dec_tokens,
+               pos, psched, fused_tbl, fused_spec, admit_rows):
+    """One fused continuous-batching step: admitted prompts AND live decode
+    slots flow through the layer stack together, with ONE attention launch
+    per superlayer scan step (i.e. one pallas_call in the whole jaxpr —
+    the jaxpr lint pins this).
+
+    pack_tokens: (1, S_pack) int32 packed admitted prompts;
+    pack_positions: (S_pack,) restarting per request; dec_tokens: (B, 1);
+    pos: (B,) decode positions; admit_rows: (A,) int32 pack rows of each
+    admitted prompt's last real token (its first sampled token comes from
+    there). Returns (logits_admit (1, A, Vp) f32, logits_dec (B, 1, Vp)
+    f32, new_cache, pack k/v states for the admit KV splice)."""
+    x_pack = jnp.take(params["embed"], pack_tokens, axis=0)
+    x_dec = jnp.take(params["embed"], dec_tokens, axis=0)
+
+    def step(xs, scanned):
+        layer_params, layer_cache = scanned
+        x_p, x_d = xs
+        x_p, x_d, new_cache, st = T.superlayer_fused(
+            layer_params, x_p, x_d, cfg, layer_cache, pos,
+            pack_positions=pack_positions, packed=psched,
+            fused_tbl=fused_tbl, fused_spec=fused_spec)
+        return (x_p, x_d), (new_cache, st)
+
+    (x_pack, x_dec), (new_cache, states) = jax.lax.scan(
+        step, (x_pack, x_dec), (params["layers"], cache))
+    x_pack = L.rms_norm(x_pack, params["final_norm"], cfg.norm_eps)
+    x_dec = L.rms_norm(x_dec, params["final_norm"], cfg.norm_eps)
+    admit_hidden = jnp.take(x_pack, admit_rows, axis=1)  # (1, A, d)
+    return (logits_from_hidden(params, cfg, admit_hidden),
+            logits_from_hidden(params, cfg, x_dec), new_cache, states)
+
+
 def prefill_cache(params, cfg, batch, max_len: int, *,
                   attn_impl: str = "scan", block: int = 512,
                   cache_dtype=jnp.bfloat16):

@@ -189,6 +189,55 @@ def superlayer_decode(p, x, cfg, cache, pos, decode_tbl=None,
 
 
 # ---------------------------------------------------------------------------
+# Fused continuous-batching step (prefill members + decode rows, one launch)
+# ---------------------------------------------------------------------------
+
+
+def layer_fused(p, x_pack, x_dec, cfg, kind: str, p_idx: int, cache, pos, *,
+                pack_positions, packed, fused_tbl, fused_spec):
+    """One layer of the fused step: BOTH streams share the layer's weights
+    and the attention mixer issues ONE fused launch (layers.fused_attention).
+    Attention-only architectures — recurrent mixers have no packed-member
+    notion, so the engine gates fused mode to attn-only archs.
+    Returns (x_pack, x_dec, new_cache, {"k","v"} pack states)."""
+    if kind != "attn":
+        raise ValueError(
+            f"fused step supports attention mixers only, got {kind!r}")
+    h_p = L.rms_norm(x_pack, p["norm1"], cfg.norm_eps)
+    h_d = L.rms_norm(x_dec, p["norm1"], cfg.norm_eps)
+    out_p, out_d, k, v, ck, cv = L.fused_attention(
+        p["mixer"], h_p, h_d, cfg, pack_positions=pack_positions,
+        packed=packed, cache_k=cache["k"], cache_v=cache["v"], pos=pos,
+        fused_tbl=fused_tbl, fused_spec=fused_spec)
+    x_pack = x_pack + out_p
+    x_dec = x_dec + out_d
+
+    h2_p = L.rms_norm(x_pack, p["norm2"], cfg.norm_eps)
+    h2_d = L.rms_norm(x_dec, p["norm2"], cfg.norm_eps)
+    if _ffn_is_moe(cfg, p_idx):
+        # serving semantics on both halves: drop-free buffers, no aux
+        x_pack = x_pack + MOE.moe_mlp(p["ffn"], h2_p, cfg, return_aux=False,
+                                      full_capacity=True)
+        x_dec = x_dec + MOE.moe_mlp(p["ffn"], h2_d, cfg, return_aux=False,
+                                    full_capacity=True)
+    else:
+        x_pack = x_pack + L.mlp(p["ffn"], h2_p, cfg)
+        x_dec = x_dec + L.mlp(p["ffn"], h2_d, cfg)
+    return x_pack, x_dec, {"k": ck, "v": cv}, {"k": k, "v": v}
+
+
+def superlayer_fused(p, x_pack, x_dec, cfg, cache, pos, *, pack_positions,
+                     packed, fused_tbl, fused_spec):
+    new_cache, states = {}, {}
+    for i, kind in enumerate(cfg.layer_pattern):
+        x_pack, x_dec, new_cache[f"l{i}"], states[f"l{i}"] = layer_fused(
+            p[f"l{i}"], x_pack, x_dec, cfg, kind, i, cache[f"l{i}"], pos,
+            pack_positions=pack_positions, packed=packed,
+            fused_tbl=fused_tbl, fused_spec=fused_spec)
+    return x_pack, x_dec, new_cache, states
+
+
+# ---------------------------------------------------------------------------
 # Cache construction
 # ---------------------------------------------------------------------------
 

@@ -17,7 +17,8 @@ EVENT_TYPES = ("launch", "span", "degrade", "quarantine")
 # repro.resilience.faults.LADDERS — the resilience lint pass proves the
 # two stay in sync). ``degrade`` events may only move between these.
 DEGRADE_STAGES = ("packed", "packed_scan", "sequential", "lockstep",
-                  "traced", "host")
+                  "traced", "host", "fused", "split", "requested",
+                  "rebucketed")
 
 # Resilience counters (emitted by serve/engine.py under these exact
 # names, globally and in the per-engine registry). Counts of discrete

@@ -296,6 +296,12 @@ LADDERS: Dict[str, Tuple[str, ...]] = {
     # traced isqrt block mapping -> host-side mapping (taken when a round
     # would exceed the certified LTM_TRACED_MAX_LAM envelope).
     "map": ("traced", "host"),
+    # fused continuous-batching step (admits + decode in one launch) ->
+    # the split admit + decode machinery (each with its own ladder).
+    "step": ("fused", "split"),
+    # a pinned decode-round grid the round outgrew -> rebucketed to the
+    # canonical power-of-two capacity (one extra compile, no crash).
+    "capacity": ("requested", "rebucketed"),
 }
 
 TRANSITIONS: Tuple[Tuple[str, str, str], ...] = tuple(

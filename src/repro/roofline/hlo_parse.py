@@ -31,6 +31,8 @@ import json
 import re
 from typing import Dict, List, Optional, Tuple
 
+from repro.launch import compat
+
 _DTYPE_BYTES = {
     "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
     "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
@@ -313,18 +315,13 @@ def _dot_flops(op: Op, sym: Dict[str, Op]) -> float:
 
 _FRAME_RE = re.compile(r"stack_frame_id=(\d+)")
 
-# Kernel-fusable interiors, identified by op_name:
-#  * the scan-attention cell — the only model code shaped as
-#    vmap(vmap(<cell with lax.scan>)) (stack-frame tables are unreliable:
-#    custom_vjp re-staging collapses source info), and
-#  * the explicit jax.named_scope markers placed around regions that have a
-#    Pallas kernel twin in kernels/ (ssm_scan for the mamba recurrence).
-# The scan cell's op_name spelling differs across JAX versions:
-# "vmap(vmap())/.../while" on newer JAX, "vmap(vmap(while))" on 0.4.x —
-# match both.
-_KERNEL_REGION_RE = re.compile(
-    r"vmap\(vmap\(\)\)[^\"]*while|vmap\(vmap\(while\)\)"
-    r"|ssm_scan_kernel|wkv_scan_kernel|tri_attn_kernel")
+# Kernel-fusable interiors, identified by op_name: the scan-attention cell
+# (stack-frame tables are unreliable: custom_vjp re-staging collapses
+# source info) plus the explicit jax.named_scope markers around scan
+# fallbacks with a Pallas twin. The per-JAX-version spellings live in ONE
+# tested table — launch/compat.KERNEL_REGION_OP_NAME_SPELLINGS — shared by
+# every HLO consumer.
+_KERNEL_REGION_RE = compat.kernel_region_regex()
 
 
 def _op_bytes(op: Op, sym: Dict[str, Op]) -> float:

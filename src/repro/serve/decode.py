@@ -210,7 +210,14 @@ def decode_step_packed(params, cfg, cache, tokens, pos, kv_lens, slots, *,
         kv_lens, slots, blk=blk, n_members=n_members, n_slots=b,
         s_cache=s_cache, window=window)
     capacity = capacity or round_capacity(needed)
-    assert capacity >= needed, (capacity, needed)
+    rebucketed = False
+    if capacity < needed:
+        # A pinned capacity the round outgrew is a RECOVERABLE sizing
+        # miss, not a crash: rebucket to the canonical power-of-two grid
+        # (one extra compile) and report it so the engine can emit the
+        # registered capacity: requested -> rebucketed degrade event.
+        capacity = round_capacity(needed)
+        rebucketed = True
     spec = attn_ops.DecodeRoundSpec(n_members=n_members, capacity=capacity,
                                     blk=blk, impl=impl)
     logits, new_cache = _packed_decode_forward(
@@ -218,7 +225,7 @@ def decode_step_packed(params, cfg, cache, tokens, pos, kv_lens, slots, *,
         jnp.asarray(tbl), spec)
     tiles_max = int(np.max(tbl[2, :len(list(kv_lens))])) if kv_lens else 0
     info = {"tiles": needed, "tiles_padded": len(list(kv_lens)) * tiles_max,
-            "capacity": capacity, "blk": blk}
+            "capacity": capacity, "blk": blk, "rebucketed": rebucketed}
     return logits, new_cache, info
 
 
@@ -294,3 +301,94 @@ def packed_prefill(params, cfg, prompts, *, block: int = 16,
                                      jnp.asarray(positions), psched,
                                      attn_impl)
     return psched, starts, lens, hidden, states
+
+
+# ---------------------------------------------------------------------------
+# Fused continuous-batching step (admits + live decode slots, one launch)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "psched", "spec"))
+def _fused_forward(params, cfg, cache, pack_tokens, pack_positions,
+                   dec_tokens, pos, tbl, admit_rows, psched, spec):
+    """Jitted fused step: compiled once per (packing template, decode
+    capacity bucket) — the fused table rides as a traced array so
+    positions advancing every round never recompile."""
+    return MD.fused_step(params, cfg, cache, pack_tokens, pack_positions,
+                         dec_tokens, pos, psched, tbl, spec, admit_rows)
+
+
+def fused_step(params, cfg, cache, prompts, tokens, pos, kv_lens, slots, *,
+               block: int = 16, impl: str = "scan", bucket: int = 0,
+               capacity: int = 0):
+    """ONE fused engine round: prefill the newly admitted ``prompts``
+    (packed block-diagonal members) AND advance every live decode slot
+    (row members over its own valid KV prefix) in a single mixed launch
+    per attention layer.
+
+    prompts: list of (S_r,) int token feeds to admit (>= 1 — decode-only
+    rounds take decode_step_packed instead). tokens: (B, 1) int32 last
+    tokens; pos: (B,) int32 (stale entries for slots being admitted /
+    retired are fine); kv_lens/slots: host lists for the LIVE decode
+    slots, exactly as decode_step_packed takes them. ``bucket`` rounds
+    each padded prompt length up to a multiple of it — the length-bucketed
+    packing templates that bound the number of distinct compiled programs.
+    ``capacity`` optionally pins the total grid; a pin the round outgrew
+    is rebucketed (info["rebucketed"]) rather than crashing.
+
+    Returns (logits_admit (A, Vp) f32 — one row per admitted prompt, from
+    its last real token; logits_dec (B, Vp) f32 — live slots only, others
+    garbage; new_cache — decode KV writes applied, admit KV NOT yet
+    spliced; states — per-layer pack k/v for kv_cache.splice_slot;
+    psched, starts, lens, info).
+    """
+    assert all(k == "attn" for k in cfg.layer_kinds), (
+        "fused_step requires attention-only token mixers; recurrent state "
+        "has no packed-member notion")
+    assert len(prompts) >= 1, "fused_step needs at least one admit"
+    b = tokens.shape[0]
+    s_cache = _attn_cache_len(cfg, cache)
+    blk = min(block, s_cache)
+    while s_cache % blk:
+        blk //= 2
+    lens = [int(len(p)) for p in prompts]
+    quantum = max(blk, -(-bucket // blk) * blk if bucket else blk)
+    pads = [-(-s // quantum) * quantum for s in lens]
+    starts = list(np.cumsum([0] + pads[:-1]))
+    s_total = sum(pads)
+    pack_tokens = np.zeros((1, s_total), np.int32)
+    pack_positions = np.zeros((s_total,), np.int32)
+    for st, pad, p in zip(starts, pads, prompts):
+        pack_tokens[0, st:st + len(p)] = np.asarray(p, np.int32)
+        pack_positions[st:st + pad] = np.arange(pad)
+    psched = attn_ops.make_packed_sched(pads, block=blk,
+                                        window=cfg.sliding_window)
+    admit_rows = np.asarray([st + ln - 1 for st, ln in zip(starts, lens)],
+                            np.int32)
+    n_members = len(pads) + b + 1
+    tbl, needed = attn_ops.make_fused_table(
+        psched, kv_lens, slots, blk=blk, n_members=n_members, n_slots=b,
+        s_cache=s_cache)
+    needed_dec = needed - psched.steps
+    dec_capacity = round_capacity(needed_dec) if len(list(kv_lens)) else 0
+    rebucketed = False
+    if capacity:
+        if capacity < psched.steps + needed_dec:
+            rebucketed = True  # same graceful rebucket as decode_step_packed
+        else:
+            dec_capacity = capacity - psched.steps
+    spec = attn_ops.FusedStepSpec(
+        n_members=n_members, capacity=psched.steps + dec_capacity,
+        blk=blk, impl=impl)
+    logits_admit, logits_dec, new_cache, states = _fused_forward(
+        params, cfg, cache, jnp.asarray(pack_tokens),
+        jnp.asarray(pack_positions), tokens,
+        jnp.asarray(pos, jnp.int32), jnp.asarray(tbl),
+        jnp.asarray(admit_rows), psched, spec)
+    tiles_max = int(np.max(tbl[2, len(pads):len(pads) + len(list(kv_lens))])
+                    ) if len(list(kv_lens)) else 0
+    info = {"tiles": needed, "capacity": spec.capacity, "blk": blk,
+            "s_pack": s_total, "rebucketed": rebucketed,
+            "tiles_padded": psched.steps + len(list(kv_lens)) * tiles_max}
+    return (logits_admit[0], logits_dec[:, 0], new_cache, states, psched,
+            starts, lens, info)

@@ -102,6 +102,17 @@ class Request:
                                np.asarray(self.out, np.int32)])
 
 
+# Decode auto-mode cost model: the packed decode round pays a per-tile
+# scheduling overhead (member search + emit gating) that the lockstep
+# fused einsum does not — measured at ~2.3x per tile on the bench_packed
+# harness (CPU scan and interpreted pallas agree within noise). "auto"
+# therefore takes the packed path only when the lockstep pad-to-max
+# waste exceeds that premium: RATIO * sum(tiles) < B * max(tiles).
+# In particular a uniform all-live batch (skew=1, equal grids) always
+# stays lockstep — the old any-skew test sent it packed and lost 2.3x.
+PACKED_TILE_COST_RATIO = 2.3
+
+
 class EngineStepError(RuntimeError):
     """A round failed past the last rung of its degradation ladder."""
 
@@ -120,6 +131,7 @@ class Engine:
                  prefill_block: int = 16, prefill_impl: str = "scan",
                  prefill_bucket: int = 0, decode_mode: str = "auto",
                  decode_block: int = 16, decode_impl: str = "scan",
+                 step_mode: str = "split", auto_cost_measure: bool = False,
                  admit_order: str = "cost", stats_log_rounds: int = 1024,
                  fault_plan: Optional[F.FaultPlan] = None, clock=None,
                  retry: Optional[F.RetryPolicy] = None,
@@ -135,6 +147,7 @@ class Engine:
             prefill_block=prefill_block, prefill_impl=prefill_impl,
             prefill_bucket=prefill_bucket, decode_mode=decode_mode,
             decode_block=decode_block, decode_impl=decode_impl,
+            step_mode=step_mode, auto_cost_measure=auto_cost_measure,
             admit_order=admit_order, stats_log_rounds=stats_log_rounds,
             deadline_s=deadline_s, max_queue_tiles=max_queue_tiles,
             quarantine_rounds=quarantine_rounds,
@@ -168,6 +181,16 @@ class Engine:
         assert decode_mode in ("auto", "packed", "lockstep")
         self.decode_mode = decode_mode if attn_only else "lockstep"
         self.decode_impl = decode_impl
+        # fused continuous batching: admits AND live decode slots advance
+        # in ONE mixed packed launch per engine step (step_fused). Needs
+        # splice-able attention mixers, same as packed prefill.
+        assert step_mode in ("split", "fused")
+        self.step_mode = step_mode if attn_only else "split"
+        # auto-mode cost model: the constant PACKED_TILE_COST_RATIO, or —
+        # opt-in — a measured per-mode EMA of seconds/tile from this
+        # engine's own rounds (only trusted once both modes have run).
+        self.auto_cost_measure = auto_cost_measure
+        self._mode_cost = {"packed": None, "lockstep": None}
         # attention KV geometry, read off the ACTUAL cache leaves (the
         # same source decode_step_packed uses — kv_len clamps can never
         # drift from the real buffer size); recurrent-only archs have no
@@ -231,7 +254,8 @@ class Engine:
     _COUNTERS = ("prefill_launches", "prefill_requests", "prefill_tokens",
                  "admit_rounds", "decode_rounds", "decode_packed_launches",
                  "decode_lockstep_launches", "decode_tiles_packed",
-                 "decode_tiles_padded")
+                 "decode_tiles_padded", "fused_rounds", "fused_launches",
+                 "fused_fallbacks", "fused_tiles")
 
     def _inc(self, name: str, value: int = 1):
         """Count into the per-engine registry AND the process-global one
@@ -617,11 +641,15 @@ class Engine:
         if stage == "packed":
             with TR.span("engine.decode_round", mode="packed",
                          live=len(live)) as sp:
-                logits, cache, _ = D.decode_step_packed(
+                logits, cache, info = D.decode_step_packed(
                     self.params, self.cfg, self.cache, self.last_tok,
                     self.pos, kv_lens, live, block=self.decode_block,
                     impl=self.decode_impl)
                 sp.attach(logits)
+            if info.get("rebucketed"):
+                self._degrade("capacity", rnd, "requested", "rebucketed",
+                              reason=(f"pinned capacity below the round's "
+                                      f"{info['tiles']} live tiles"))
         else:
             with TR.span("engine.decode_round", mode="lockstep",
                          live=len(live)) as sp:
@@ -646,12 +674,18 @@ class Engine:
         # round geometry (recorded every round, whichever path runs): what
         # the packed grid covers vs what pad-to-max lockstep would.
         tiles = [-(-kl // self.decode_block) for kl in kv_lens]
-        # skew at TILE granularity: equal tile counts with every slot live
-        # means the packed grid equals pad-to-max — lockstep's one fused
-        # einsum wins there, the packed grid wins everywhere else.
-        skewed = len(live) < self.B or len(set(tiles)) > 1
+        # COST CROSSOVER (not the old any-skew test): the packed round
+        # does RATIO times more work per tile than lockstep's fused
+        # einsum, so "auto" goes packed only when pad-to-max waste beats
+        # that premium. Lockstep always launches the full batch
+        # (B * max tiles), so mild skew — or a uniform batch, where the
+        # old test already lost 2.3x by going packed — stays lockstep.
+        ratio = PACKED_TILE_COST_RATIO
+        if self.auto_cost_measure and all(self._mode_cost.values()):
+            ratio = self._mode_cost["packed"] / self._mode_cost["lockstep"]
         use_packed = self.decode_mode == "packed" or (
-            self.decode_mode == "auto" and skewed)
+            self.decode_mode == "auto"
+            and ratio * sum(tiles) < self.B * max(tiles))
         self._inc("decode_rounds")
         self._inc("decode_tiles_packed", sum(tiles))
         self._inc("decode_tiles_padded", len(live) * max(tiles))
@@ -677,6 +711,12 @@ class Engine:
         dur = float(self.clock()) - t0
         if self._round_watch.observe(dur):
             self._inc_res("rounds_straggler_total")
+        if self.auto_cost_measure:
+            done = sum(tiles) if stage == "packed" else self.B * max(tiles)
+            per_tile = dur / max(1, done)
+            prev = self._mode_cost[stage]
+            self._mode_cost[stage] = per_tile if prev is None \
+                else 0.8 * prev + 0.2 * per_tile
         # NaN/Inf guard at the host boundary (+ injected poison lands in
         # the same place the guard inspects).
         bad: List[int] = []
@@ -726,15 +766,173 @@ class Engine:
                 self._finish(req, "done")
                 self.slot_req[slot] = None  # slot freed -> refilled next admit
 
+    # -- fused continuous batching -------------------------------------------
+    def step_fused(self):
+        """One FUSED engine round: admit every queued request a free slot
+        can take AND advance every live decode slot, in ONE mixed packed
+        launch per attention layer (decode.fused_step over the "mixed"
+        schedule kind). Rounds with nothing to admit delegate to step()
+        — the split decode round is already a single launch.
+
+        Any failure inside the fused attempt (injected fault, poisoned
+        states, traced-envelope overflow, real launch error) takes the
+        registered step: fused -> split rung: the admits are requeued at
+        the head and the round re-runs through the split machinery, whose
+        own admit/decode ladders then absorb the fault. Greedy decode is
+        token-identical either way."""
+        self._release_quarantine()
+        free = [s for s in range(self.B) if self.slot_req[s] is None
+                and s not in self.quarantined]
+        take = min(len(free), len(self.queue))
+        if not take:
+            return self.step()
+        reqs = self._pick_requests(take)
+        pairs = list(zip(free, reqs))
+        for req in reqs:
+            req.status = "running"
+        a_rnd = self._admit_round_idx
+        d_rnd = self._decode_round_idx
+        live = [s for s in range(self.B) if self.slot_req[s] is not None
+                and s not in [sl for sl, _ in pairs]]
+        pos_np = np.asarray(self.pos)
+        kv_lens = [int(min(pos_np[s] + 1, self.s_cache)) for s in live]
+        self._inc("fused_rounds")
+        try:
+            if self.fault_plan is not None:
+                self._sleep(self.fault_plan.maybe_fail("admit", a_rnd))
+                if live:
+                    self._sleep(self.fault_plan.maybe_fail("decode", d_rnd))
+            prompts = [req.feed for _, req in pairs]
+            if not D.traced_prefill_ok([len(p) for p in prompts],
+                                       self.decode_block,
+                                       self._traced_max_lam):
+                raise RuntimeError(
+                    "admit member exceeds the certified traced-isqrt "
+                    f"envelope (traced_max_lam={self._traced_max_lam})")
+            with TR.span("engine.fused_step", requests=len(pairs),
+                         live=len(live)) as sp:
+                (logits_admit, logits_dec, cache, states, _, starts, lens,
+                 info) = D.fused_step(
+                    self.params, self.cfg, self.cache, prompts,
+                    self.last_tok, self.pos, kv_lens, live,
+                    block=self.decode_block, impl=self.decode_impl,
+                    bucket=self.prefill_bucket)
+                sp.attach(logits_dec)
+            if self.fault_plan is not None and \
+                    self.fault_plan.poisons_admit(a_rnd):
+                states = jax.tree.map(
+                    lambda x: jnp.full_like(x, jnp.nan)
+                    if jnp.issubdtype(x.dtype, jnp.floating) else x, states)
+            if self.guard_output and not D.states_finite(states):
+                raise F.PoisonedOutput(
+                    f"fused round {d_rnd}: non-finite packed states")
+        except Exception as e:  # noqa: BLE001 — hardening boundary
+            # fused -> split: requeue the admits at the head (aging keeps
+            # them first) and re-run the round through the split ladders,
+            # which own retries / further degradation for this fault.
+            self._inc("fused_fallbacks")
+            self._degrade("step", d_rnd, "fused", "split",
+                          reason=f"{type(e).__name__}: {e}")
+            for req in reqs:
+                req.status = "queued"
+            self.queue[0:0] = reqs
+            self._admit()
+            self.step()
+            return
+        # -- commit (the exact split order: admit splice, then decode) ---
+        self._admit_round_idx += 1
+        self._decode_round_idx += 1
+        self._inc("admit_rounds")
+        self._admit_order_log.append(
+            [(r.uid, self._prefill_tiles(r)) for r in reqs])
+        self._admit_round_tiles.append(
+            sum(self._prefill_tiles(r) for r in reqs))
+        self._inc("fused_launches")
+        self._inc("fused_tiles", info["tiles"])
+        self._inc("prefill_requests", len(pairs))
+        self._inc("prefill_tokens", sum(lens))
+        if live:
+            self._inc("decode_rounds")
+        self.cache = cache
+        for (slot, req), start, length in zip(pairs, starts, lens):
+            self._splice_slot(slot, states, start, length)
+            self.slot_req[slot] = req
+            self.remaining[slot] = req.max_new - len(req.out)
+        # decode-half poison guard, identical to step()
+        bad: List[int] = []
+        logits_np = np.array(logits_dec, np.float32)
+        if self.fault_plan is not None:
+            for s in self.fault_plan.poison_slots(d_rnd, live):
+                logits_np[s] = np.nan
+        if self.guard_output:
+            bad = D.poisoned_slots(logits_np, live)
+        replays: List[Request] = []
+        for slot in bad:
+            req = self.slot_req[slot]
+            self.slot_req[slot] = None
+            self.quarantined[slot] = d_rnd + 1 + self.quarantine_rounds
+            req.replays += 1
+            req.status = "queued"
+            replays.append(req)
+            self._inc_res("slots_quarantined_total")
+            if SK.trace_enabled():
+                SK.emit_event({"type": "quarantine", "slot": slot,
+                               "uid": req.uid, "round": d_rnd,
+                               "reason": "nonfinite_logits"})
+        if replays:
+            self.queue[0:0] = replays
+        # ONE key split per fused round (the admits' first tokens and the
+        # decode tokens share it; at temperature=0 both are pure argmax).
+        self.key, k = jax.random.split(self.key)
+        nxt_np = np.asarray(D.sample_logits(
+            k, logits_dec, temperature=self.temperature,
+            vocab_size=self.cfg.vocab_size))
+        adm_np = np.asarray(D.sample_logits(
+            k, logits_admit, temperature=self.temperature,
+            vocab_size=self.cfg.vocab_size))
+        new_pos = np.asarray(self.pos).copy()
+        new_last = np.asarray(self.last_tok).copy()
+        for slot in live:
+            if slot in bad:
+                continue
+            req = self.slot_req[slot]
+            req.out.append(int(nxt_np[slot]))
+            new_pos[slot] += 1
+            new_last[slot, 0] = int(nxt_np[slot])
+            self.remaining[slot] -= 1
+            if self.remaining[slot] <= 0 or \
+                    int(new_pos[slot]) >= self.max_len - 1:
+                self._finish(req, "done")
+                self.slot_req[slot] = None
+        for (slot, req), length, tok in zip(pairs, lens, adm_np):
+            req.out.append(int(tok))
+            new_pos[slot] = length  # the sampled token's position
+            new_last[slot, 0] = int(tok)
+            self.remaining[slot] -= 1
+            if self.remaining[slot] <= 0 or \
+                    int(new_pos[slot]) >= self.max_len - 1:
+                self._finish(req, "done")
+                self.slot_req[slot] = None
+        self.pos = jnp.asarray(new_pos)
+        self.last_tok = jnp.asarray(new_last)
+
     def run(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
         """Drive admission + decode until drained (or max_steps rounds).
 
-        Returns {uid: tokens} for every request that reached a terminal
-        state — including the partial outputs of shed / deadline-missed /
-        failed requests (see report() for statuses). Per-step failures
-        never abort unaffected slots."""
+        step_mode="fused" folds each round's admission INTO its decode
+        launch (step_fused); "split" keeps the separate packed-admit and
+        decode rounds. Returns {uid: tokens} for every request that
+        reached a terminal state — including the partial outputs of shed /
+        deadline-missed / failed requests (see report() for statuses).
+        Per-step failures never abort unaffected slots."""
         for _ in range(max_steps):
             self._expire_deadlines()
+            if self.step_mode == "fused":
+                self._release_quarantine()
+                if all(r is None for r in self.slot_req) and not self.queue:
+                    break
+                self.step_fused()
+                continue
             self._admit()
             if all(r is None for r in self.slot_req) and not self.queue:
                 break

@@ -279,21 +279,38 @@ def test_engine_packed_decode_token_identical(arch):
 
 
 def test_engine_auto_mode_prefers_lockstep_when_uniform():
-    """decode_mode='auto': uniform all-live rounds stay lockstep; skew or
-    retirement flips to packed."""
+    """decode_mode='auto' is a COST crossover, not a skew test: packed wins
+    only when PACKED_TILE_COST_RATIO * sum(tiles) < B * max(tiles). Uniform
+    all-live rounds stay lockstep (the regression: skew=1 must be
+    lockstep); one deep straggler among short slots flips to packed."""
+    from repro.serve import engine as E
+
     cfg, params = _setup()
     rng = np.random.default_rng(5)
     prompts = [rng.integers(1, cfg.vocab_size, size=7).astype(np.int32)
                for _ in range(2)]
     res, st = _run_engine(cfg, params, prompts, [4, 4], "auto")
-    # equal-length prompts, equal max_new, slots == requests: never skewed
+    # equal-length prompts, equal max_new, slots == requests: sum(tiles)
+    # == B * max(tiles), so the ratio-discounted packed cost never wins
     assert st["decode_packed_launches"] == 0
     assert st["decode_lockstep_launches"] == st["decode_rounds"] > 0
-    # skewed prompt lengths -> packed rounds appear
+    # mild skew is NOT enough any more: at B=2 even tiles [1, 2] give
+    # ratio*sum = 2.3*3 > 2*2 = B*max — lockstep is genuinely cheaper
     prompts = [rng.integers(1, cfg.vocab_size, size=s).astype(np.int32)
                for s in (3, 13)]
     res, st = _run_engine(cfg, params, prompts, [4, 4], "auto")
-    assert st["decode_packed_launches"] > 0
+    assert st["decode_packed_launches"] == 0
+    # one deep straggler among short slots: tiles [1, 1, 1, 5] ->
+    # 2.3 * 8 = 18.4 < 4 * 5 = 20 -> packed rounds appear
+    assert E.PACKED_TILE_COST_RATIO * 8 < 4 * 5
+    eng = Engine(params, cfg, slots=4, max_len=48, temperature=0.0,
+                 prefill_block=4, decode_mode="auto", decode_block=8)
+    prompts = [rng.integers(1, cfg.vocab_size, size=s).astype(np.int32)
+               for s in (3, 3, 3, 37)]
+    for uid, p in enumerate(prompts):
+        eng.submit(p, max_new=4, uid=uid)
+    eng.run()
+    assert eng.stats["decode_packed_launches"] > 0
 
 
 def test_engine_recurrent_arch_falls_back_to_lockstep_decode():

@@ -281,6 +281,79 @@ def test_packed_nested_cover_and_roundtrip():
             check_host(pk, coords)
 
 
+def _mixed_halves(n: int):
+    """Deterministically split n tile-rows into a fused step's halves:
+    prefill members cycling ltm/band/prefix over the first ceil(n/2) rows,
+    the rest as decode kv_tiles. Either half may come out empty (n=1 edge:
+    prefill-only), matching real rounds."""
+    n_p = (n + 1) // 2
+    sizes, rem = [], n_p
+    for c in range(64):
+        if rem == 0:
+            break
+        take = min((2, 1, 3)[c % 3], rem)
+        sizes.append(take)
+        rem -= take
+    prefill = []
+    for idx, sz in enumerate(sizes):
+        kind = idx % 3
+        if kind == 0:
+            prefill.append(S.TriangularSchedule(n=sz))
+        elif kind == 1:
+            prefill.append(S.BandSchedule(n=sz, w=1 + idx % 2))
+        else:
+            prefill.append(S.PrefixSchedule(n=sz, p=idx % (sz + 1)))
+    kv, rem = [], n - n_p
+    for c in range(64):
+        if rem == 0:
+            break
+        take = min((1, 3, 2)[c % 3], rem)
+        kv.append(take)
+        rem -= take
+    return tuple(prefill), tuple(kv)
+
+
+def test_mixed_step_cover_and_roundtrip():
+    """The fused continuous-batching kind: registry "mixed" packs prefill
+    members + decode row members into one grid; cover + pack_lambda
+    round-trip fuzzed exactly like "packed" above."""
+    cases = [_mixed_halves(n) for n in range(1, N_MAX + 1)]
+    packs = [S.make_schedule("mixed", 0, prefill_members=pm, kv_tiles=kv)
+             for pm, kv in cases]
+    results = jit_sweep([_map_with(pk) for pk in packs])
+    for n, ((pm, kv), pk, (coords, _)) in enumerate(
+            zip(cases, packs, results), start=1):
+        assert pk.n == n
+        # member order is the fused ABI: prefill columns first, then one
+        # RowSchedule per decode slot
+        assert len(pk.members) == len(pm) + len(kv)
+        assert all(not isinstance(m, S.RowSchedule)
+                   for m in pk.members[:len(pm)])
+        assert all(isinstance(m, S.RowSchedule) and m.n == t
+                   for m, t in zip(pk.members[len(pm):], kv))
+        expect = canon(tuple(np.array(v) for v in zip(
+            *[(r, i, j) for r, m in enumerate(pk.members)
+              for (i, j) in m.enumerate_host()])))
+        check_cover(coords, expect, f"mixed n={n}")
+        for lam in range(pk.num_blocks):
+            assert pk.pack_lambda(*pk.host_map(lam)) == lam
+        if n in HOST_NS:
+            check_host(pk, coords)
+
+
+def test_mixed_step_rejects_row_prefill_and_empty():
+    with pytest.raises(ValueError, match="decode half"):
+        S.make_schedule("mixed", 0,
+                        prefill_members=(S.RowSchedule(n=2),),
+                        kv_tiles=(1,))
+    with pytest.raises(ValueError, match="at least one member"):
+        S.make_schedule("mixed", 0, prefill_members=(), kv_tiles=())
+    with pytest.raises(ValueError, match="mixed n must be"):
+        S.make_schedule("mixed", 7,
+                        prefill_members=(S.TriangularSchedule(n=2),),
+                        kv_tiles=(3,))
+
+
 def test_packed_decode_round_is_row_pack():
     """decode_round(kv_tiles) == packed RowSchedule members: the decode
     grid is the same machinery the prefill pack fuzzes above."""
