@@ -1,0 +1,141 @@
+"""Fleet front end under skewed arrivals, with and without engine death.
+
+Two replicas behind tri(n) tile-cost routing serve a skewed arrival mix
+(a few long prompts among many short ones — the workload where naive
+round-robin routing imbalances worst). Two scenarios:
+
+  healthy — no faults. Reports per-replica routed requests/tiles and
+            checks the greedy least-loaded balance bound: the replicas'
+            routed-tile totals differ by at most one maximal request.
+  failover — a FaultPlan kills replica 0's decode a few rounds in
+            (persistent strikes exhaust its retry ladder). Reports
+            failovers/migrations/restores and checks the determinism
+            contract: every request — including the migrated ones —
+            finishes token-identically to a fault-free SINGLE-engine run.
+
+Structural columns (tiles, migrations) are hardware-independent; the
+wall-clock column times the scan-impl engines on CPU through a
+VirtualClock, so the fault schedule is bitwise-reproducible.
+
+  PYTHONPATH=src python -m benchmarks.bench_fleet [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+
+def _prompts(n: int, rng: np.random.Generator, long_len: int,
+             short_max: int) -> list:
+    """Skewed mix: every 4th request is long, the rest short-ragged."""
+    out = []
+    for i in range(n):
+        size = long_len if i % 4 == 0 else int(rng.integers(2, short_max))
+        out.append(rng.integers(1, 50, size=size).astype(np.int32))
+    return out
+
+
+def run(n_requests: int = 12, engines: int = 2, max_new: int = 3,
+        long_len: int = 16, short_max: int = 7, seed: int = 0,
+        out_path: str | None = None) -> dict:
+    import jax
+
+    from repro.configs import registry as REG
+    from repro.models import model as MD
+    from repro.resilience import faults as F
+    from repro.serve.engine import Engine
+    from repro.serve.fleet import Fleet
+
+    cfg = REG.smoke_config("yi-9b")
+    params = MD.init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(seed)
+    prompts = _prompts(n_requests, rng, long_len, short_max)
+    engine_kw = dict(slots=2, max_len=48, temperature=0.0, prefill_block=4)
+
+    # the determinism yardstick: one engine, no faults
+    eng = Engine(params, cfg, clock=F.VirtualClock(), **engine_kw)
+    for uid, p in enumerate(prompts):
+        eng.submit(p, max_new=max_new, uid=uid)
+    baseline = eng.run()
+
+    kill = F.FaultPlan([F.Fault("launch_error", "decode", 2, times=99,
+                                engine=0)])
+    rec = {"n_requests": n_requests, "engines": engines,
+           "max_new": max_new, "seed": seed, "scenarios": {}}
+    for name, plan in (("healthy", None), ("failover", kill)):
+        fleet = Fleet(params, cfg, engines=engines, fault_plan=plan,
+                      engine_kw=engine_kw, heartbeat_timeout_s=5.0,
+                      snapshot_every=2)
+        for uid, p in enumerate(prompts):
+            fleet.submit(p, max_new=max_new, uid=uid)
+        routed = {e: int(fleet.registry.counter_value(
+            "fleet_requests_routed_total", {"engine": str(e)}))
+            for e in range(engines)}
+        tiles = {e: int(fleet.registry.counter_value(
+            "fleet_routed_tiles_total", {"engine": str(e)}))
+            for e in range(engines)}
+        max_item = max(fleet.engines[0]._prefill_tiles(r)
+                       for f_eng in fleet.engines for r in f_eng.queue)
+        t0 = time.perf_counter()
+        res = fleet.run(max_steps=500)
+        wall_s = time.perf_counter() - t0
+        rep = fleet.report()
+        identical = all(res.get(u) == baseline[u] for u in baseline)
+        st = fleet.stats
+        rec["scenarios"][name] = {
+            "routed_requests": routed, "routed_tiles": tiles,
+            "tile_spread": max(tiles.values()) - min(tiles.values()),
+            "max_request_tiles": max_item,
+            "statuses": sorted({r["status"] for r in rep.values()}),
+            "token_identical_to_single_engine": identical,
+            "failovers": st["fleet_failovers_total"],
+            "migrated": st["fleet_requests_migrated_total"],
+            "restores": st["fleet_engine_restores_total"],
+            "fleet_rounds": st["rounds"], "wall_s": wall_s,
+        }
+        # hard gates: a bench that prints broken numbers is worse than one
+        # that fails loudly.
+        assert identical, f"{name}: migrated streams diverged"
+        assert set(rep) == set(range(n_requests))
+        assert rec["scenarios"][name]["tile_spread"] <= max_item, (
+            "greedy least-loaded routing must keep per-replica tile "
+            "totals within one maximal request")
+    assert rec["scenarios"]["failover"]["failovers"] >= 1
+    assert rec["scenarios"]["failover"]["migrated"] >= 1
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main(smoke: bool = False,
+         out_path: str = "artifacts/bench_fleet.json"):
+    rec = run(n_requests=8 if smoke else 16,
+              max_new=3 if smoke else 4, out_path=out_path)
+    for name, s in rec["scenarios"].items():
+        print(f"  {name:8s}: routed={s['routed_requests']} "
+              f"tiles={s['routed_tiles']} "
+              f"(spread {s['tile_spread']} <= max request "
+              f"{s['max_request_tiles']}) failovers={s['failovers']} "
+              f"migrated={s['migrated']} identical="
+              f"{s['token_identical_to_single_engine']} "
+              f"wall={s['wall_s']:.2f}s")
+    print(f"  OK: failover run token-identical to the fault-free "
+          f"single engine ({rec['scenarios']['failover']['migrated']} "
+          f"requests migrated)")
+    return rec
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes (CI tier, scripts/check.sh)")
+    args = ap.parse_args()
+    import os
+
+    os.makedirs("artifacts", exist_ok=True)
+    main(smoke=args.smoke)

@@ -14,6 +14,9 @@
   bench_continuous  — continuous batching: the FUSED engine-step launch
                       (admits + live decode slots, one mixed member table)
                       vs the split prefill + decode pair at skew {1,4,16}
+  bench_fleet       — replicated engines: tri(n) tile-cost routing balance
+                      under skewed arrivals, and failover determinism
+                      (migrated requests token-identical) under engine death
   bench_roofline    — §Roofline table from the dry-run artifacts (if present)
 
 --smoke is the CI tier: tiny n, scan impls only, seconds not minutes —
@@ -46,7 +49,8 @@ def main(argv=None):
     print(f"obs: trace -> {trace_path}")
 
     from benchmarks import bench_mapping, bench_tet_mapping, bench_edm, \
-        bench_attention, bench_packed, bench_continuous, bench_roofline
+        bench_attention, bench_packed, bench_continuous, bench_fleet, \
+        bench_roofline
 
     t0 = time.time()
     print("=" * 72)
@@ -135,6 +139,13 @@ def main(argv=None):
     bench_continuous.main(
         smoke=args.smoke or args.fast,
         out_path="artifacts/bench_continuous.json")
+
+    print("=" * 72)
+    print("bench_fleet (replicated engines: routing balance + failover)")
+    print("=" * 72)
+    bench_fleet.main(
+        smoke=args.smoke or args.fast,
+        out_path="artifacts/bench_fleet.json")
 
     print("=" * 72)
     print("bench_roofline (dry-run artifacts)")

@@ -60,4 +60,10 @@ if [ "$#" -eq 0 ]; then
     # no-network guard as the test suite (PYTHONPATH includes scripts).
     echo "== resilience smoke (fault injection, offline) =="
     python -m repro.resilience.smoke
+    # Fleet failover smoke tier: two replicas behind tile-cost routing
+    # under an engine-killing plan, both step modes — migrated requests
+    # must finish token-identically to a fault-free single engine, with
+    # every failover/quarantine/rebalance event schema-valid.
+    echo "== fleet resilience smoke (failover, offline) =="
+    python -m repro.resilience.smoke --fleet
 fi

@@ -25,6 +25,19 @@ groups:
                     fault-free run, with the degrade and quarantine
                     counters actually firing. The resilience claim, not
                     just its plumbing.
+  fleet coverage    the fleet rungs of the same registry: every adjacent
+                    transition of the engine/route ladders must be mapped
+                    to a schema-registered event in
+                    serve.fleet.TRANSITION_EVENTS, the fleet's
+                    ``_transition`` gate must assert
+                    ``is_registered_transition``, fleet.py must call
+                    ``_transition`` with exactly the mapped literals, and
+                    the ``_inc("...")`` counter literals must match
+                    schema.FLEET_COUNTERS both ways. The fleet event
+                    types may never be emitted as raw literals anywhere —
+                    the guarded gate is the only path. A dynamic check
+                    kills one replica mid-run and requires failover to be
+                    token-identical.
 """
 
 from __future__ import annotations
@@ -83,6 +96,8 @@ def lint_vocab_sync() -> List[CheckResult]:
 # ---------------------------------------------------------------------------
 
 _ENGINE_REL = "src/repro/serve/engine.py"
+_FLEET_REL = "src/repro/serve/fleet.py"
+_FLEET_EVENTS = ("failover", "engine_quarantine", "rebalance")
 
 
 def _event_type_literals(call: ast.Call) -> List[str]:
@@ -118,11 +133,19 @@ def lint_emission_coverage() -> List[CheckResult]:
                 if etype in ("degrade", "quarantine") \
                         and rel != _ENGINE_REL:
                     offenders.append(f"{rel}:{node.lineno}:{etype}")
+                if etype in _FLEET_EVENTS:
+                    # fleet lifecycle events may ONLY flow through the
+                    # fleet's guarded _transition gate (which emits them
+                    # via the TRANSITION_EVENTS mapping, never as a raw
+                    # literal) — a literal emission anywhere bypasses the
+                    # registry check.
+                    offenders.append(f"{rel}:{node.lineno}:{etype}")
     out = [_res(
         "resilience.coverage.events_from_engine_only",
         not offenders,
         f"{scanned} files scanned; degrade/quarantine emitted outside "
-        f"{_ENGINE_REL}: {offenders or 'none'}")]
+        f"{_ENGINE_REL} or fleet events emitted as raw literals: "
+        f"{offenders or 'none'}")]
 
     # _degrade must assert is_registered_transition before emitting, and
     # every _inc_res literal must be a declared counter (and vice versa).
@@ -160,6 +183,89 @@ def lint_emission_coverage() -> List[CheckResult]:
         f"engine emits {sorted(inc_res)}; undeclared: "
         f"{sorted(undeclared) or 'none'}; declared-but-never-emitted: "
         f"{sorted(unemitted) or 'none'}"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# fleet transition emission coverage
+# ---------------------------------------------------------------------------
+
+
+def lint_fleet_coverage() -> List[CheckResult]:
+    from repro.obs import schema as SCH
+    from repro.resilience import faults as F
+    from repro.serve import fleet as FL
+
+    out = []
+    # every adjacent rung of the fleet ladders maps to a registered event
+    adjacent = {(phase, F.LADDERS[phase][i], F.LADDERS[phase][i + 1])
+                for phase in ("engine", "route")
+                for i in range(len(F.LADDERS[phase]) - 1)}
+    mapped = set(FL.TRANSITION_EVENTS)
+    unmapped = adjacent - mapped
+    unknown = mapped - adjacent
+    bad_events = [e for e in FL.TRANSITION_EVENTS.values()
+                  if e not in SCH.EVENT_TYPES]
+    out.append(_res(
+        "resilience.fleet.transitions_mapped",
+        not unmapped and not unknown and not bad_events,
+        f"adjacent fleet transitions {sorted(adjacent)}; unmapped: "
+        f"{sorted(unmapped) or 'none'}; mapped-but-unregistered: "
+        f"{sorted(unknown) or 'none'}; events outside schema: "
+        f"{bad_events or 'none'}"))
+
+    # AST over fleet.py: the _transition gate asserts the registry, the
+    # call sites cover exactly the mapped transitions, and the counter /
+    # gauge literals match the schema declarations both ways.
+    tree = ast.parse((_repo_root() / _FLEET_REL).read_text(
+        encoding="utf-8"))
+    guard_ok = False
+    calls: set = set()
+    incs: set = set()
+    gauges: set = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef) \
+                and node.name == "_transition":
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Assert):
+                    names = {n.attr for n in ast.walk(sub.test)
+                             if isinstance(n, ast.Attribute)}
+                    names |= {n.id for n in ast.walk(sub.test)
+                              if isinstance(n, ast.Name)}
+                    if "is_registered_transition" in names:
+                        guard_ok = True
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)):
+            continue
+        if node.func.attr == "_transition" and len(node.args) >= 3 and \
+                all(isinstance(a, ast.Constant) for a in node.args[:3]):
+            calls.add(tuple(str(a.value) for a in node.args[:3]))
+        if node.func.attr == "_inc" and node.args \
+                and isinstance(node.args[0], ast.Constant):
+            incs.add(str(node.args[0].value))
+        if node.func.attr == "gauge_set" and node.args \
+                and isinstance(node.args[0], ast.Constant):
+            gauges.add(str(node.args[0].value))
+    out.append(_res(
+        "resilience.fleet.transition_gate_guarded", guard_ok,
+        "_transition asserts is_registered_transition before emitting"
+        if guard_ok else
+        "_transition does NOT assert is_registered_transition"))
+    out.append(_res(
+        "resilience.fleet.transition_sites_cover_mapping",
+        calls == mapped,
+        f"fleet.py _transition call sites {sorted(calls)} vs "
+        f"TRANSITION_EVENTS keys {sorted(mapped)} (must be identical)"))
+    undeclared = incs - set(SCH.FLEET_COUNTERS)
+    unemitted = set(SCH.FLEET_COUNTERS) - incs
+    bad_gauges = gauges - set(SCH.FLEET_GAUGES)
+    out.append(_res(
+        "resilience.fleet.counters_declared",
+        not undeclared and not unemitted and not bad_gauges,
+        f"fleet emits {sorted(incs)}; undeclared: "
+        f"{sorted(undeclared) or 'none'}; declared-but-never-emitted: "
+        f"{sorted(unemitted) or 'none'}; undeclared gauges: "
+        f"{sorted(bad_gauges) or 'none'}"))
     return out
 
 
@@ -209,10 +315,54 @@ def lint_dynamic_identity() -> List[CheckResult]:
         f"{st['requests_failed_total']}")]
 
 
+def lint_dynamic_fleet_failover() -> List[CheckResult]:
+    """Kill one replica mid-run (persistent decode launch failure) and
+    require the fleet's streams identical to the fault-free single-engine
+    run — the failover claim itself, exercised on CPU."""
+    import jax
+    import numpy as np
+
+    from repro.configs import registry as REG
+    from repro.models import model as MD
+    from repro.resilience import faults as F
+    from repro.serve.engine import Engine
+    from repro.serve.fleet import Fleet
+
+    cfg = REG.smoke_config("yi-9b")
+    params = MD.init_params(jax.random.key(0), cfg)
+    prompts = [np.array([3, 1, 4, 1], np.int32),
+               np.array([2, 7, 1], np.int32),
+               np.array([9, 8, 2, 6, 5], np.int32)]
+    eng = Engine(params, cfg, slots=2, max_len=32, temperature=0.0,
+                 prefill_block=4, clock=F.VirtualClock())
+    for uid, p in enumerate(prompts):
+        eng.submit(p, max_new=3, uid=uid)
+    baseline = eng.run()
+
+    plan = F.FaultPlan(
+        [F.Fault("launch_error", "decode", 1, times=99, engine=0)])
+    fleet = Fleet(params, cfg, engines=2, fault_plan=plan,
+                  engine_kw=dict(slots=2, max_len=32, temperature=0.0,
+                                 prefill_block=4))
+    for uid, p in enumerate(prompts):
+        fleet.submit(p, max_new=3, uid=uid)
+    res = fleet.run(max_steps=100)
+    st = fleet.stats
+    identical = all(res.get(u) == baseline[u] for u in baseline)
+    return [_res(
+        "resilience.fleet.dynamic_failover_identity",
+        identical and st["fleet_failovers_total"] >= 1
+        and st["fleet_requests_migrated_total"] >= 1,
+        f"failed-over fleet == fault-free engine: {identical}; "
+        f"failovers={st['fleet_failovers_total']} "
+        f"migrated={st['fleet_requests_migrated_total']}")]
+
+
 def run() -> List[CheckResult]:
     out = []
     for rule_fn in (lint_vocab_sync, lint_emission_coverage,
-                    lint_dynamic_identity):
+                    lint_fleet_coverage, lint_dynamic_identity,
+                    lint_dynamic_fleet_failover):
         try:
             out.extend(rule_fn())
         except Exception as e:  # a crash IS a lint failure

@@ -11,14 +11,16 @@ from typing import List
 
 from repro.obs.sinks import SCHEMA_VERSION
 
-EVENT_TYPES = ("launch", "span", "degrade", "quarantine")
+EVENT_TYPES = ("launch", "span", "degrade", "quarantine",
+               "failover", "engine_quarantine", "rebalance")
 
 # Canonical vocabulary of the serving degradation ladder (see
 # repro.resilience.faults.LADDERS — the resilience lint pass proves the
 # two stay in sync). ``degrade`` events may only move between these.
 DEGRADE_STAGES = ("packed", "packed_scan", "sequential", "lockstep",
                   "traced", "host", "fused", "split", "requested",
-                  "rebucketed")
+                  "rebucketed", "active", "quarantined", "restored",
+                  "primary", "failover")
 
 # Resilience counters (emitted by serve/engine.py under these exact
 # names, globally and in the per-engine registry). Counts of discrete
@@ -29,6 +31,19 @@ RESILIENCE_COUNTERS = (
     "slots_quarantined_total", "requests_failed_total",
     "rounds_straggler_total",
 )
+
+# Fleet counters (emitted by serve/fleet.py under these exact names, in
+# the fleet registry and mirrored globally). Discrete-event counts —
+# validate_metrics requires them integral when present. The
+# ``engines_quarantined`` GAUGE (current quarantine-set size) rides
+# alongside and must be an integral non-negative value.
+FLEET_COUNTERS = (
+    "fleet_failovers_total", "fleet_requests_migrated_total",
+    "fleet_engine_restores_total", "fleet_rounds_straggler_total",
+    "fleet_requests_routed_total", "fleet_routed_tiles_total",
+    "fleet_requests_shed_total",
+)
+FLEET_GAUGES = ("engines_quarantined",)
 
 # Required fields per event type (beyond the envelope added by sinks).
 _LAUNCH_FIELDS = {
@@ -46,6 +61,17 @@ _DEGRADE_FIELDS = {
 }
 _QUARANTINE_FIELDS = {
     "slot": int, "uid": int, "round": int, "reason": str,
+}
+_FAILOVER_FIELDS = {
+    "engine": int, "target": int, "round": int, "migrated": int,
+    "reason": str,
+}
+_ENGINE_QUARANTINE_FIELDS = {
+    "engine": int, "round": int, "consecutive": int,
+    "probation_rounds": int, "reason": str,
+}
+_REBALANCE_FIELDS = {
+    "engine": int, "round": int, "reason": str,
 }
 
 
@@ -123,6 +149,38 @@ def validate_event(ev: dict, *, envelope: bool = True) -> List[str]:
                    f"quarantine.slot must be >= 0: {ev['slot']!r}")
             _check(errors, ev["round"] >= 0,
                    f"quarantine.round must be >= 0: {ev['round']!r}")
+    elif etype == "failover":
+        for field, ftype in _FAILOVER_FIELDS.items():
+            _check(errors, isinstance(ev.get(field), ftype),
+                   f"failover.{field} missing or not {ftype}: "
+                   f"{ev.get(field)!r}")
+        if not errors:
+            for field in ("engine", "target", "round", "migrated"):
+                _check(errors, ev[field] >= 0,
+                       f"failover.{field} must be >= 0: {ev[field]!r}")
+    elif etype == "engine_quarantine":
+        for field, ftype in _ENGINE_QUARANTINE_FIELDS.items():
+            _check(errors, isinstance(ev.get(field), ftype),
+                   f"engine_quarantine.{field} missing or not {ftype}: "
+                   f"{ev.get(field)!r}")
+        if not errors:
+            for field in ("engine", "round"):
+                _check(errors, ev[field] >= 0,
+                       f"engine_quarantine.{field} must be >= 0: "
+                       f"{ev[field]!r}")
+            for field in ("consecutive", "probation_rounds"):
+                _check(errors, ev[field] >= 1,
+                       f"engine_quarantine.{field} must be >= 1: "
+                       f"{ev[field]!r}")
+    elif etype == "rebalance":
+        for field, ftype in _REBALANCE_FIELDS.items():
+            _check(errors, isinstance(ev.get(field), ftype),
+                   f"rebalance.{field} missing or not {ftype}: "
+                   f"{ev.get(field)!r}")
+        if not errors:
+            for field in ("engine", "round"):
+                _check(errors, ev[field] >= 0,
+                       f"rebalance.{field} must be >= 0: {ev[field]!r}")
     return errors
 
 
@@ -149,6 +207,16 @@ def validate_metrics(doc: dict) -> List[str]:
             _check(errors, float(v) == int(v),
                    f"resilience counter {name} must be integral "
                    f"(counts discrete events): {v!r}")
+        if base in FLEET_COUNTERS:
+            _check(errors, float(v) == int(v),
+                   f"fleet counter {name} must be integral "
+                   f"(counts discrete events): {v!r}")
+    for name, v in (doc.get("gauges") or {}).items():
+        if name.split("{", 1)[0] in FLEET_GAUGES:
+            _check(errors,
+                   isinstance(v, (int, float)) and v >= 0
+                   and float(v) == int(v),
+                   f"fleet gauge {name} must be integral >= 0: {v!r}")
     for name, h in (doc.get("histograms") or {}).items():
         if not isinstance(h, dict):
             errors.append(f"histogram {name} is not an object")

@@ -13,8 +13,15 @@ Submodules (see README.md in this directory for the full tour):
   snapshot  ``EngineSnapshot``: serialize slot table + KV cache + RNG/clock
             state so ``Engine.restore(snap).run(...)`` resumes
             token-identically after a crash.
-  smoke     CLI fault-injection smoke tier (``python -m
-            repro.resilience.smoke``), wired into scripts/check.sh.
+  smoke     CLI fault-injection smoke tiers (``python -m
+            repro.resilience.smoke`` for the single engine, ``--fleet``
+            for multi-replica failover), wired into scripts/check.sh.
+
+The fleet front end (serve/fleet.py) composes these pieces at replica
+granularity: ``Fault(engine=...)`` / ``FaultPlan.for_engine`` scope
+injection to one replica, ``HeartbeatMonitor``/``RoundWatch`` watch each
+replica's rounds, and ``snapshot.strip_for_restart`` turns a victim's
+snapshot into its clean re-entry state after probation.
 
 Everything is host-side and deterministic: every fault a plan injects is
 a pure function of (seed, phase, round, attempt), so a faulted run is

@@ -76,7 +76,9 @@ class Fault:
     admit-phase faults to one request of the round on the sequential
     path (-1 = whole round, any member). ``slot`` scopes decode poison to
     a batch row (-1 = first live slot). ``delay_s`` is the straggler
-    delay."""
+    delay. ``engine`` scopes the fault to one replica of a fleet
+    (serve/fleet.py hands each replica ``plan.for_engine(e)``); -1 keeps
+    the single-engine behavior — the fault applies to every engine."""
 
     kind: str
     phase: str
@@ -85,6 +87,7 @@ class Fault:
     member: int = -1
     slot: int = -1
     delay_s: float = 0.0
+    engine: int = -1
 
     def __post_init__(self):
         assert self.kind in FAULT_KINDS, self.kind
@@ -119,7 +122,8 @@ class FaultPlan:
     def random(cls, seed: int, *, n_rounds: int = 8, rate: float = 0.25,
                kinds: Sequence[str] = FAULT_KINDS,
                phases: Sequence[str] = ("admit", "decode"),
-               delay_s: float = 1.0) -> "FaultPlan":
+               delay_s: float = 1.0,
+               engines: Sequence[int] = (-1,)) -> "FaultPlan":
         """Generate a plan deterministically from ``seed``: each (phase,
         round) cell independently faults with probability ``rate``."""
         rng = np.random.default_rng(seed)
@@ -134,8 +138,20 @@ class FaultPlan:
                 faults.append(Fault(
                     kind=kind, phase=phase, round=rnd,
                     times=int(rng.integers(1, 3)),
-                    delay_s=delay_s if kind == "straggler" else 0.0))
+                    delay_s=delay_s if kind == "straggler" else 0.0,
+                    engine=(int(rng.choice(list(engines)))
+                            if tuple(engines) != (-1,) else -1)))
         return cls(faults, seed=seed)
+
+    def for_engine(self, engine: int) -> "FaultPlan":
+        """The sub-plan a fleet hands replica ``engine``: faults scoped to
+        it plus every engine-agnostic fault (``engine == -1``). The
+        sub-plan is a FRESH object with its own strike bookkeeping — two
+        replicas never race for the same fault's strikes, so a fleet run
+        is as replayable as a single-engine one."""
+        return FaultPlan(
+            [f for f in self.faults if f.engine in (-1, engine)],
+            seed=self.seed)
 
     # -- bookkeeping ---------------------------------------------------------
     def reset(self):
@@ -302,6 +318,13 @@ LADDERS: Dict[str, Tuple[str, ...]] = {
     # a pinned decode-round grid the round outgrew -> rebucketed to the
     # canonical power-of-two capacity (one extra compile, no crash).
     "capacity": ("requested", "rebucketed"),
+    # fleet replica lifecycle: a healthy engine -> quarantined after a
+    # fault (circuit breaker may stretch the probation window) ->
+    # restored from a cleaned snapshot once the window elapses.
+    "engine": ("active", "quarantined", "restored"),
+    # fleet routing: the request's primary replica -> a healthy peer it
+    # was migrated to by deterministic failover.
+    "route": ("primary", "failover"),
 }
 
 TRANSITIONS: Tuple[Tuple[str, str, str], ...] = tuple(

@@ -1,6 +1,7 @@
 """Fault-injection smoke tier.
 
     PYTHONPATH=src:scripts python -m repro.resilience.smoke [--plans N]
+    PYTHONPATH=src:scripts python -m repro.resilience.smoke --fleet
 
 Runs the tiny smoke engine offline (the scripts/_offline_guard socket
 guard is installed when importable) under N seeded random FaultPlans and
@@ -16,8 +17,16 @@ checks the resilience contract end to end:
     the flushed metrics document (resilience counters included) passes
     ``repro.obs.schema.validate_metrics``.
 
-Exit code 0 iff every check passes — scripts/check.sh gates on it, so
-the engine's failure handling cannot rot between the occasions someone
+``--fleet`` runs the fleet tier instead: a two-replica Fleet under an
+engine-killing FaultPlan, in BOTH step modes, checking deterministic
+failover end to end — migrated requests finish token-identically to the
+fault-free single-engine baseline, every request lands in exactly one
+terminal status, the ``failover`` / ``engine_quarantine`` /
+``rebalance`` events are schema-valid, and the flushed metrics carry
+integral fleet counters.
+
+Exit code 0 iff every check passes — scripts/check.sh gates on both
+tiers, so the failure handling cannot rot between the occasions someone
 actually pulls a cable.
 """
 
@@ -66,6 +75,79 @@ def _run(cfg, params, prompts, *, plan=None, max_new=4):
     return eng, eng.run()
 
 
+def _fleet_tier(args, check) -> None:
+    """Two replicas, an engine-killing plan, both step modes: the fleet
+    failover contract, end to end through the real sinks."""
+    import json as _json
+
+    from repro.obs import schema as SCH
+    from repro.obs import sinks as SK
+    from repro.resilience import faults as F
+    from repro.serve.fleet import Fleet
+
+    cfg, params, prompts = _build()
+    trace_path = SK.enable(
+        trace_dir=os.path.join(args.artifacts, "trace"),
+        metrics_path=os.path.join(args.artifacts, "metrics_fleet.json"),
+        run_id=f"fleet-smoke-{args.seed}")
+    try:
+        _, baseline = _run(cfg, params, prompts)
+        for step_mode in ("split", "fused"):
+            plan = F.FaultPlan([F.Fault("launch_error", "decode", 1,
+                                        times=99, engine=0)])
+            fleet = Fleet(
+                params, cfg, engines=2, fault_plan=plan,
+                engine_kw=dict(slots=2, max_len=48, temperature=0.0,
+                               prefill_block=4, step_mode=step_mode),
+                heartbeat_timeout_s=5.0, snapshot_every=2)
+            for uid, p in enumerate(prompts):
+                fleet.submit(p, max_new=4, uid=uid)
+            res = fleet.run(max_steps=200)
+            rep = fleet.report()
+            terminal = {"done", "shed", "deadline_miss", "failed"}
+            check(set(rep) == set(range(len(prompts)))
+                  and all(r["status"] in terminal for r in rep.values()),
+                  f"fleet[{step_mode}]: every request terminal: "
+                  f"{ {u: r['status'] for u, r in rep.items()} }")
+            check(all(res.get(u) == baseline[u] for u in baseline),
+                  f"fleet[{step_mode}]: failed-over run token-identical "
+                  f"to fault-free single engine")
+            st = fleet.stats
+            check(st["fleet_failovers_total"] >= 1
+                  and st["fleet_requests_migrated_total"] >= 1
+                  and st["fleet_engine_restores_total"] >= 1
+                  and st["engines_quarantined"] == 0,
+                  f"fleet[{step_mode}]: failover fired and drained: "
+                  f"failovers={st['fleet_failovers_total']} "
+                  f"migrated={st['fleet_requests_migrated_total']} "
+                  f"restores={st['fleet_engine_restores_total']}")
+        metrics_path = SK.flush_metrics()
+    finally:
+        SK.disable()
+
+    kinds = {"failover": 0, "engine_quarantine": 0, "rebalance": 0}
+    with open(trace_path, encoding="utf-8") as fh:
+        for line in fh:
+            ev = _json.loads(line)
+            if ev.get("type") not in kinds:
+                continue
+            kinds[ev["type"]] += 1
+            errs = SCH.validate_event(ev)
+            if errs:
+                check(False, f"fleet trace event invalid: {errs}")
+    check(all(v >= 1 for v in kinds.values()),
+          f"fleet lifecycle events traced and validated: {kinds}")
+
+    with open(metrics_path, encoding="utf-8") as fh:
+        doc = _json.load(fh)
+    errs = SCH.validate_metrics(doc)
+    check(not errs, f"metrics doc {metrics_path}: {errs or 'schema-valid'}")
+    present = [c for c in SCH.FLEET_COUNTERS
+               if any(k.split("{", 1)[0] == c for k in doc["counters"])]
+    check(len(present) >= 4,
+          f"fleet counters present in metrics.json: {present}")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.resilience.smoke",
@@ -75,17 +157,13 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--artifacts", default="artifacts",
                     help="directory for the trace/metrics outputs")
+    ap.add_argument("--fleet", action="store_true",
+                    help="run the fleet failover tier instead of the "
+                         "single-engine tier")
     args = ap.parse_args(argv)
 
     guarded = _install_offline_guard()
     print(f"offline guard: {'installed' if guarded else 'unavailable'}")
-
-    from repro.obs import metrics as MET
-    from repro.obs import schema as SCH
-    from repro.obs import sinks as SK
-    from repro.resilience import faults as F
-    from repro.resilience import snapshot as SNAP
-    from repro.serve.engine import Engine
 
     failures = []
 
@@ -93,6 +171,18 @@ def main(argv=None) -> int:
         print(("  ok   " if ok else "  FAIL ") + what)
         if not ok:
             failures.append(what)
+
+    if args.fleet:
+        _fleet_tier(args, check)
+        print(f"fleet resilience smoke: {len(failures)} failures")
+        return 1 if failures else 0
+
+    from repro.obs import metrics as MET
+    from repro.obs import schema as SCH
+    from repro.obs import sinks as SK
+    from repro.resilience import faults as F
+    from repro.resilience import snapshot as SNAP
+    from repro.serve.engine import Engine
 
     cfg, params, prompts = _build()
     trace_path = SK.enable(

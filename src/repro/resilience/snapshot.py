@@ -63,6 +63,17 @@ class EngineSnapshot:
     slot_req: List[Optional[dict]]
     queue: List[dict]
     finished: List[dict]
+    # -- fused-mode state (PR 9 seam; defaults keep v1 files loadable) --
+    # the EFFECTIVE step mode at capture (init_kw carries the REQUESTED
+    # one; they differ only when a recurrent arch forced "split").
+    step_mode: str = "split"
+    # auto_cost_measure's per-mode seconds/tile EMA — without it a
+    # restored auto engine re-learns the crossover from scratch.
+    mode_cost: Dict[str, Optional[float]] = dataclasses.field(
+        default_factory=dict)
+    # distinct fused packing templates compiled so far, as JSON-safe
+    # [[padded lens...], capacity] pairs (Engine.fused_templates).
+    fused_templates: List = dataclasses.field(default_factory=list)
 
 
 def _req_to_dict(req) -> dict:
@@ -107,21 +118,37 @@ def snapshot(engine) -> EngineSnapshot:
         slot_req=[None if r is None else _req_to_dict(r)
                   for r in engine.slot_req],
         queue=[_req_to_dict(r) for r in engine.queue],
-        finished=[_req_to_dict(r) for r in engine.finished])
+        finished=[_req_to_dict(r) for r in engine.finished],
+        step_mode=engine.step_mode,
+        mode_cost=dict(engine._mode_cost),
+        fused_templates=sorted(
+            [[int(p) for p in tpl], int(cap)]
+            for tpl, cap in engine.fused_templates))
 
 
 def restore(snap: EngineSnapshot, *, params=None, fault_plan=None,
-            clock=None, retry=None):
+            clock=None, retry=None, escalate_step_errors: bool = False):
     """Rebuild an Engine from ``snap``; run() resumes token-identically.
 
     ``params`` overrides the snapshot's weights (e.g. to share one
-    device copy across engines); fault_plan/clock/retry are the runtime
-    harness of the NEW process and default to a clean engine."""
+    device copy across engines); fault_plan/clock/retry/
+    escalate_step_errors are the runtime harness of the NEW process and
+    default to a clean stand-alone engine (a Fleet restores its replicas
+    with escalate_step_errors=True)."""
     from repro.serve.engine import Engine
 
     eng = Engine(snap.params if params is None else params, snap.cfg,
                  fault_plan=fault_plan, clock=clock, retry=retry,
+                 escalate_step_errors=escalate_step_errors,
                  **snap.init_kw)
+    if snap.step_mode != eng.step_mode:
+        raise ValueError(
+            f"snapshot captured effective step_mode={snap.step_mode!r} "
+            f"but the rebuilt engine resolved {eng.step_mode!r} — the "
+            "config drifted between capture and restore")
+    eng._mode_cost.update(snap.mode_cost)
+    eng.fused_templates = {(tuple(tpl), int(cap))
+                           for tpl, cap in snap.fused_templates}
     eng.cache = jax.tree.map(jnp.asarray, snap.cache)
     eng.pos = jnp.asarray(snap.pos)
     eng.last_tok = jnp.asarray(snap.last_tok)
@@ -138,6 +165,19 @@ def restore(snap: EngineSnapshot, *, params=None, fault_plan=None,
     eng.queue = [_req_from_dict(d, shift) for d in snap.queue]
     eng.finished = [_req_from_dict(d, shift) for d in snap.finished]
     return eng
+
+
+def strip_for_restart(snap: EngineSnapshot) -> EngineSnapshot:
+    """A cleaned copy for fleet failover restoration: the victim's
+    requests are migrated to a healthy replica, so the restored engine
+    starts EMPTY — but keeps its round indices (round-addressed faults it
+    already struck never re-fire, making recovery deterministic), RNG
+    key, clock base, cost EMA and compile-footprint records."""
+    return dataclasses.replace(
+        snap,
+        slot_req=[None] * len(snap.slot_req),
+        queue=[], finished=[], quarantined={},
+        remaining=np.zeros_like(snap.remaining))
 
 
 # ---------------------------------------------------------------------------
@@ -203,6 +243,9 @@ def to_dir(snap: EngineSnapshot, path: str) -> str:
         "slot_req": snap.slot_req,
         "queue": snap.queue,
         "finished": snap.finished,
+        "step_mode": snap.step_mode,
+        "mode_cost": snap.mode_cost,
+        "fused_templates": snap.fused_templates,
     }
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump(meta, f)
@@ -242,4 +285,13 @@ def from_dir(path: str) -> EngineSnapshot:
         decode_round_idx=meta["decode_round_idx"],
         quarantined={int(k): v for k, v in meta["quarantined"].items()},
         slot_req=meta["slot_req"], queue=meta["queue"],
-        finished=meta["finished"])
+        finished=meta["finished"],
+        # pre-fused-seam files lack these keys (same v1 schema): default
+        # step_mode to the EFFECTIVE mode the engine would resolve from
+        # the recorded kwargs (recurrent mixers force "split").
+        step_mode=meta.get("step_mode", (
+            kw.get("step_mode", "split")
+            if all(k == "attn" for k in cfg_d["layer_pattern"])
+            else "split")),
+        mode_cost=meta.get("mode_cost", {}),
+        fused_templates=meta.get("fused_templates", []))

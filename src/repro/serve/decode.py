@@ -389,6 +389,12 @@ def fused_step(params, cfg, cache, prompts, tokens, pos, kv_lens, slots, *,
                     ) if len(list(kv_lens)) else 0
     info = {"tiles": needed, "capacity": spec.capacity, "blk": blk,
             "s_pack": s_total, "rebucketed": rebucketed,
-            "tiles_padded": psched.steps + len(list(kv_lens)) * tiles_max}
+            "tiles_padded": psched.steps + len(list(kv_lens)) * tiles_max,
+            # the length-bucketed packing template this round compiled
+            # under: the padded prompt lengths that, with the capacity,
+            # pin the fused program's static shapes. The engine records
+            # the distinct set (compile-footprint accounting, persisted
+            # across snapshot/restore).
+            "template": tuple(int(p) for p in pads)}
     return (logits_admit[0], logits_dec[:, 0], new_cache, states, psched,
             starts, lens, info)

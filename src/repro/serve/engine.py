@@ -138,7 +138,8 @@ class Engine:
                  deadline_s: Optional[float] = None,
                  max_queue_tiles: int = 0, quarantine_rounds: int = 8,
                  traced_max_lam: Optional[int] = None,
-                 guard_output: bool = True):
+                 guard_output: bool = True,
+                 escalate_step_errors: bool = False):
         # ctor kwargs as REQUESTED (pre-downgrade), for snapshot/restore;
         # fault_plan/clock/retry are runtime harness, supplied at restore.
         self._init_kw = dict(
@@ -226,11 +227,26 @@ class Engine:
         self._traced_max_lam = (M.LTM_TRACED_MAX_LAM if traced_max_lam
                                 is None else traced_max_lam)
         self.guard_output = guard_output
+        # fleet-replica mode (runtime harness, like fault_plan/clock —
+        # NOT part of _init_kw): instead of absorbing a terminal round
+        # failure in-engine (fail the round's requests, quarantine a
+        # poisoned slot), RAISE it so the owning Fleet can snapshot the
+        # replica and migrate its requests token-identically. Requests
+        # not yet committed to a slot are requeued at the head before the
+        # raise, so the snapshot the fleet captures accounts for every
+        # request exactly once.
+        self.escalate_step_errors = escalate_step_errors
         self.quarantined: Dict[int, int] = {}  # slot -> release round
         self._rolling = cfg.sliding_window is not None
         self._round_watch = H.RoundWatch()
         self._admit_round_idx = 0
         self._decode_round_idx = 0
+        # distinct fused packing templates this engine has compiled under:
+        # {(padded-length tuple, capacity)} — the compile-footprint record
+        # the snapshot persists (satellite of the bucketing story: the
+        # set is bounded by prefill_bucket, and a restored engine knows
+        # which programs its predecessor already paid for).
+        self.fused_templates: set = set()
         # observability: ONE packed launch per admit round (prefill) and
         # per decode round; prefill vs decode launches counted apart, plus
         # per-round tile accounting for the packed-vs-padded claim.
@@ -351,6 +367,12 @@ class Engine:
             try:
                 return True, fn(attempt), None
             except Exception as e:  # noqa: BLE001 — hardening boundary
+                if self.escalate_step_errors and \
+                        isinstance(e, (EngineStepError, F.PoisonedOutput)):
+                    # fleet replica: a nested terminal failure or a
+                    # poisoned round is not retried here — it escalates
+                    # so the fleet can quarantine + migrate.
+                    raise
                 err = e
                 if attempt < self.retry.max_retries:
                     self._inc_res("requests_retried_total", n_affected)
@@ -544,6 +566,10 @@ class Engine:
 
             ok, _, err = self._attempt(one, n_affected=1)
             if not ok:
+                if self.escalate_step_errors:
+                    # last rung of the admit ladder exhausted on a fleet
+                    # replica: the engine is out of fallbacks — escalate.
+                    raise EngineStepError("admit", rnd, err)
                 self._record_failure(req, "admit", rnd, err)
 
     def _prefill_tiles(self, req: Request) -> int:
@@ -625,13 +651,24 @@ class Engine:
         try:
             self._run_ladder("admit", rnd, stages, runner,
                              n_affected=len(pairs))
-        except EngineStepError as e:
+        except (EngineStepError, F.PoisonedOutput) as e:
+            if self.escalate_step_errors:
+                # fleet replica: requeue the round's uncommitted requests
+                # at the head (committed slots ride the snapshot as
+                # in-flight) and hand the failure to the fleet.
+                requeue = [req for slot, req in pairs
+                           if self.slot_req[slot] is not req]
+                for req in requeue:
+                    req.status = "queued"
+                self.queue[0:0] = requeue
+                raise
             # even the sequential rung raised for the whole round: fail
             # every request of the round explicitly and keep serving.
             for slot, req in pairs:
                 if self.slot_req[slot] is req:
                     self.slot_req[slot] = None
-                self._record_failure(req, "admit", rnd, e.cause)
+                self._record_failure(req, "admit", rnd,
+                                     getattr(e, "cause", e))
 
     # -- decode loop ---------------------------------------------------------
     def _decode_stage(self, stage: str, rnd: int, live, kv_lens):
@@ -699,6 +736,10 @@ class Engine:
                 lambda s, a: self._decode_stage(s, rnd, live, kv_lens),
                 n_affected=len(live))
         except EngineStepError as e:
+            if self.escalate_step_errors:
+                # fleet replica: nothing committed this round — the live
+                # slots ride the snapshot as in-flight and migrate.
+                raise
             # unrecoverable round: attribute the failure to every live
             # request uid, free the slots, keep the engine serving.
             for slot in live:
@@ -727,6 +768,15 @@ class Engine:
                     logits_np[s] = np.nan
             if self.guard_output:
                 bad = D.poisoned_slots(logits_np, live)
+        if bad and self.escalate_step_errors:
+            # fleet replica: a poisoned round escalates BEFORE any state
+            # commits (no cache/pos/token writes happened yet) — the
+            # fleet quarantines the whole replica instead of this engine
+            # quarantining one slot, and every live request's feed still
+            # excludes the poisoned round, so migration re-prefills the
+            # exact pre-fault state.
+            raise F.PoisonedOutput(
+                f"decode round {rnd}: non-finite logits in slots {bad}")
         replays: List[Request] = []
         for slot in bad:
             req = self.slot_req[slot]
@@ -849,6 +899,8 @@ class Engine:
             sum(self._prefill_tiles(r) for r in reqs))
         self._inc("fused_launches")
         self._inc("fused_tiles", info["tiles"])
+        self.fused_templates.add(
+            (tuple(info["template"]), int(info["capacity"])))
         self._inc("prefill_requests", len(pairs))
         self._inc("prefill_tokens", sum(lens))
         if live:
@@ -866,6 +918,15 @@ class Engine:
                 logits_np[s] = np.nan
         if self.guard_output:
             bad = D.poisoned_slots(logits_np, live)
+        if bad and self.escalate_step_errors:
+            # fleet replica: escalate instead of slot-quarantining. The
+            # fused cache/splice commits above are discarded with the
+            # replica — no token was appended for any slot this round, so
+            # every request's feed is still pre-fault and migration
+            # re-prefills the exact state.
+            raise F.PoisonedOutput(
+                f"fused round {d_rnd}: non-finite decode logits in "
+                f"slots {bad}")
         replays: List[Request] = []
         for slot in bad:
             req = self.slot_req[slot]
@@ -915,6 +976,24 @@ class Engine:
                 self.slot_req[slot] = None
         self.pos = jnp.asarray(new_pos)
         self.last_tok = jnp.asarray(new_last)
+
+    def idle(self) -> bool:
+        """True iff the engine holds no work (empty queue, no live slot)."""
+        return not self.queue and all(r is None for r in self.slot_req)
+
+    def round(self):
+        """ONE full scheduling round — the unit a fleet driver advances a
+        replica by: deadline sweep, then either a fused step or a split
+        admit + decode pair. run() is this in a drain loop; a Fleet calls
+        it directly so it can heartbeat/watch each replica per round."""
+        self._expire_deadlines()
+        if self.step_mode == "fused":
+            self._release_quarantine()
+            if not self.idle():
+                self.step_fused()
+            return
+        self._admit()
+        self.step()
 
     def run(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
         """Drive admission + decode until drained (or max_steps rounds).

@@ -1,0 +1,394 @@
+"""Fleet front end: N engine replicas, tile-cost routing, deterministic
+failover.
+
+The paper's block-space accounting gives serving an EXACT, hardware-
+independent cost model — a request of S prompt tokens costs
+tri(ceil(S / block)) tiles in its admit round's packed grid (core/
+packing). PR 5 uses it to order admission inside one engine and PR 8 to
+shed overload; this module uses the same number to run a FLEET: requests
+route to the replica with the fewest outstanding tiles (queued +
+in-flight), so the balance property is the scheduling-theory one —
+greedy least-loaded keeps per-replica tile totals within one maximal
+request of each other — and it is starvation-free for the same reason
+single-engine admission is (each engine's queue head always rides its
+next admit round; migration splices at the head).
+
+Failover is DETERMINISTIC, the fleet-scale version of PR 8's quarantine
++ re-prefill replay:
+
+    active ──fault──> quarantined ──probation──> restored     (engine)
+    primary ──migrate──────────────────────────> failover     (route)
+
+Each replica runs with ``escalate_step_errors=True``: a round failure
+its own ladders cannot absorb (retries exhausted past the last rung, or
+a poisoned output) RAISES instead of failing requests in place. The
+fleet then (1) captures an on-fault ``EngineSnapshot`` (falling back to
+the last periodic one), (2) moves the snapshot's finished requests into
+the fleet's terminal set and MIGRATES its queued + in-flight requests —
+spliced at a healthy replica's queue head, in slot order then queue
+order — and (3) parks the victim as a cleaned snapshot
+(``strip_for_restart``: empty slots/queue, round indices and RNG kept)
+until its probation window elapses. Because ``Request.feed`` is
+prompt + tokens-already-emitted and greedy decode is deterministic, the
+target replica re-prefills the EXACT pre-fault state: the fleet's final
+per-request token streams are identical to a fault-free single-engine
+run (property-tested under the full fault matrix, split and fused).
+
+A circuit breaker stretches the probation window: K consecutive faulted
+rounds (no successful working round between them) quarantines the
+replica for ``probation_rounds`` fleet rounds instead of one. Liveness
+is watched per round with ``HeartbeatMonitor`` (a straggler delay longer
+than ``heartbeat_timeout_s`` kills the replica even though its round
+committed — migration is still token-identical because the committed
+tokens ARE the deterministic ones) and per-replica ``RoundWatch``
+medians flag slow rounds. Every transition is a counted metric
+(schema.FLEET_COUNTERS / FLEET_GAUGES) and a schema-validated trace
+event — ``failover``, ``engine_quarantine``, ``rebalance`` — emitted
+through the single ``_transition`` guard, which runtime-checks the move
+against faults.LADDERS exactly like the engine's ``_degrade`` does (the
+resilience lint pass proves the coverage statically).
+
+Everything runs off one shared clock (default: a fresh ``VirtualClock``,
+so fleet runs — fault injection, deadlines, heartbeats, probation — are
+bitwise-replayable offline on CPU; pass ``clock=time.monotonic`` for
+wall-clock serving).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import mapping as M
+from repro.obs import metrics as MET
+from repro.obs import schema as SCH
+from repro.obs import sinks as SK
+from repro.resilience import faults as F
+from repro.resilience import health as H
+from repro.resilience import snapshot as SNAP
+from repro.serve.engine import Engine, Request
+
+# Registered fleet transitions -> the trace event each one emits. The
+# single source the ``_transition`` guard consults; the resilience lint
+# pass proves (a) every adjacent rung of the engine/route ladders is
+# covered here, (b) every mapped event type is schema-registered, and
+# (c) fleet.py calls _transition with exactly these literals.
+TRANSITION_EVENTS: Dict[Tuple[str, str, str], str] = {
+    ("engine", "active", "quarantined"): "engine_quarantine",
+    ("engine", "quarantined", "restored"): "rebalance",
+    ("route", "primary", "failover"): "failover",
+}
+
+
+class Fleet:
+    """N engine replicas behind tile-cost routing with deterministic
+    failover. submit() then run() until drained, like a single Engine."""
+
+    def __init__(self, params, cfg, *, engines: int = 2,
+                 engine_kw: Optional[dict] = None, clock=None,
+                 fault_plan: Optional[F.FaultPlan] = None,
+                 heartbeat_timeout_s: float = 60.0,
+                 snapshot_every: int = 4, breaker_k: int = 3,
+                 probation_rounds: int = 8, max_fleet_tiles: int = 0):
+        assert engines >= 1
+        assert breaker_k >= 1 and probation_rounds >= 1
+        self.params, self.cfg = params, cfg
+        self.n = engines
+        self.clock = clock if clock is not None else F.VirtualClock()
+        self.engine_kw = dict(engine_kw or {})
+        # per-replica fault sub-plans: each replica gets the faults scoped
+        # to it (engine == -1 applies everywhere) with its OWN strike
+        # bookkeeping, held here so strikes persist across restores — a
+        # consumed fault never re-fires on the restored replica.
+        self._plans: Dict[int, Optional[F.FaultPlan]] = {
+            e: (fault_plan.for_engine(e) if fault_plan is not None
+                else None)
+            for e in range(engines)}
+        self.engines: List[Optional[Engine]] = [
+            Engine(params, cfg, fault_plan=self._plans[e],
+                   clock=self.clock, escalate_step_errors=True,
+                   **self.engine_kw)
+            for e in range(engines)]
+        self.monitor = H.HeartbeatMonitor(
+            range(engines), timeout_s=heartbeat_timeout_s)
+        self.watches: Dict[int, H.RoundWatch] = {
+            e: H.RoundWatch() for e in range(engines)}
+        self.snapshot_every = snapshot_every
+        self.breaker_k = breaker_k
+        self.probation_rounds = probation_rounds
+        self.max_fleet_tiles = max_fleet_tiles
+        self._snaps: Dict[int, SNAP.EngineSnapshot] = {}
+        # engine -> (cleaned snapshot, fleet round it may restore at)
+        self._pending_restore: Dict[int, Tuple[SNAP.EngineSnapshot,
+                                               int]] = {}
+        self._consecutive: Dict[int, int] = {e: 0 for e in range(engines)}
+        # requests the FLEET holds terminally: a victim's finished set
+        # (salvaged from its snapshot at failover) and fleet-shed
+        # requests. Disjoint from every live engine's requests by
+        # construction — report() merges without collisions.
+        self._terminal: List[Request] = []
+        self._round = 0
+        self.registry = MET.Registry("fleet")
+        self.quarantine_log: List[dict] = []
+        self._set_quarantine_gauge()
+
+    # -- telemetry -----------------------------------------------------------
+    def _inc(self, name: str, value: int = 1,
+             engine: Optional[int] = None):
+        """Fleet counters keep their canonical schema.FLEET_COUNTERS
+        names in the fleet registry AND the process-global one (the names
+        are already fleet_-prefixed — no collision with engine_*)."""
+        labels = None if engine is None else {"engine": str(engine)}
+        self.registry.counter_inc(name, value, labels)
+        MET.counter_inc(name, value, labels)
+
+    def _set_quarantine_gauge(self):
+        n = len(self._pending_restore)
+        self.registry.gauge_set("engines_quarantined", n)
+        MET.gauge_set("engines_quarantined", n)
+
+    @property
+    def stats(self) -> dict:
+        st = {name: int(self.registry.counter_total(name))
+              for name in SCH.FLEET_COUNTERS}
+        st["engines_quarantined"] = int(self.registry.gauge_value(
+            "engines_quarantined", default=0))
+        st["rounds"] = self._round
+        st["quarantine_log"] = list(self.quarantine_log)
+        return st
+
+    def _transition(self, phase: str, frm: str, to: str, payload: dict):
+        """The one gate every fleet lifecycle move passes through:
+        runtime-checked against the LADDERS registry (like the engine's
+        _degrade) and emitted as its mapped, schema-validated event."""
+        assert F.is_registered_transition(phase, frm, to), (
+            f"unregistered fleet transition {phase}: {frm} -> {to}; "
+            f"declare it in repro.resilience.faults.LADDERS")
+        etype = TRANSITION_EVENTS[(phase, frm, to)]
+        if SK.trace_enabled():
+            SK.emit_event({"type": etype, **payload})
+
+    # -- routing -------------------------------------------------------------
+    def _outstanding_tiles(self, eng: Engine) -> int:
+        """The replica's load in the admission cost model: tri(n) tiles
+        of everything it still owes — queued and in-flight."""
+        reqs = list(eng.queue) + [r for r in eng.slot_req if r is not None]
+        return sum(eng._prefill_tiles(r) for r in reqs)
+
+    def _live(self) -> List[int]:
+        return [e for e in range(self.n) if self.engines[e] is not None]
+
+    def submit(self, prompt: np.ndarray, max_new: int, uid: int,
+               deadline_s: Optional[float] = None):
+        """Route to the live replica with the fewest outstanding tiles
+        (ties to the lowest engine index — deterministic). Greedy
+        least-loaded on an exact cost model: per-replica totals stay
+        within one maximal request of each other."""
+        if not self._live():
+            # every replica is parked: restore the earliest immediately
+            # rather than refuse work.
+            self._restore_due(force=True)
+        target = min(self._live(), key=lambda e: (
+            self._outstanding_tiles(self.engines[e]), e))
+        eng = self.engines[target]
+        eng.submit(prompt, max_new, uid, deadline_s=deadline_s)
+        tiles = M.tri(-(-int(np.asarray(prompt).size) // eng.prefill_block))
+        self._inc("fleet_requests_routed_total", engine=target)
+        self._inc("fleet_routed_tiles_total", tiles, engine=target)
+        self._shed_fleet_overload()
+
+    def _shed_fleet_overload(self):
+        """Fleet-wide backpressure on the same tri(n) ordering as
+        engine-level shedding: while the GLOBAL queued-tile total exceeds
+        ``max_fleet_tiles``, shed the heaviest request that is not any
+        replica's queue head — every head still rides its engine's next
+        admit round, so fleet backpressure stays starvation-free."""
+        if not self.max_fleet_tiles:
+            return
+        while True:
+            live = self._live()
+            total = sum(
+                sum(self.engines[e]._prefill_tiles(r)
+                    for r in self.engines[e].queue) for e in live)
+            if total <= self.max_fleet_tiles:
+                return
+            candidates = [
+                (self.engines[e]._prefill_tiles(r), e, i)
+                for e in live
+                for i, r in enumerate(self.engines[e].queue) if i > 0]
+            if not candidates:
+                return  # only heads remain: never shed those
+            _, e, i = max(candidates)
+            victim = self.engines[e].queue.pop(i)
+            victim.status = "shed"
+            victim.done = True
+            victim.error = (
+                f"fleet shed: global queue over capacity "
+                f"({self.max_fleet_tiles} tiles) and this was the "
+                f"heaviest non-head request")
+            self._terminal.append(victim)
+            self._inc("fleet_requests_shed_total", engine=e)
+
+    # -- drive loop ----------------------------------------------------------
+    def tick(self):
+        """One fleet round: restore replicas whose probation elapsed,
+        then advance every live replica one engine round under the
+        heartbeat/round watch."""
+        if self._pending_restore:
+            self._restore_due(force=not self._live())
+        for e in range(self.n):
+            eng = self.engines[e]
+            if eng is not None:
+                self._drive(e, eng)
+        self._round += 1
+
+    def _drive(self, e: int, eng: Engine):
+        working = not eng.idle()
+        t0 = float(self.clock())
+        self.monitor.beat(e, self._round, now=t0)
+        try:
+            eng.round()
+        except Exception as err:  # noqa: BLE001 — failover boundary
+            self._on_engine_fault(e, eng,
+                                  f"{type(err).__name__}: {err}")
+            return
+        now = float(self.clock())
+        if working and self.watches[e].observe(now - t0):
+            self._inc("fleet_rounds_straggler_total", engine=e)
+        if e in self.monitor.failed(now=now):
+            # the round COMMITTED (its tokens are the deterministic
+            # ones) but took longer than the liveness budget — treat the
+            # replica as dead and migrate what it still owes.
+            self._on_engine_fault(e, eng, (
+                f"heartbeat timeout: round took {now - t0:.3f}s > "
+                f"{self.monitor.timeout_s}s"))
+            return
+        if working:
+            self._consecutive[e] = 0
+            if self.snapshot_every and \
+                    self._round % self.snapshot_every == 0:
+                self._snaps[e] = SNAP.snapshot(eng)
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
+        """Drive the fleet until drained — including ticking out any
+        remaining probation windows so parked replicas rejoin. Returns
+        {uid: tokens} for every terminal request, like Engine.run."""
+        for _ in range(max_steps):
+            if self._drained() and not self._pending_restore:
+                break
+            self.tick()
+        return self.results()
+
+    def _drained(self) -> bool:
+        return all(eng is None or eng.idle() for eng in self.engines)
+
+    # -- failover ------------------------------------------------------------
+    def _on_engine_fault(self, e: int, eng: Engine, reason: str):
+        """Deterministic failover: snapshot the victim, salvage its
+        terminal requests, migrate the rest to a healthy replica, park
+        the victim for its probation window."""
+        self._consecutive[e] += 1
+        consec = self._consecutive[e]
+        try:
+            snap = SNAP.snapshot(eng)
+        except Exception:  # noqa: BLE001 — salvage from the periodic one
+            snap = self._snaps.get(e)
+        if snap is None:
+            snap = self._snaps.get(e)
+        assert snap is not None, (
+            f"engine {e} died before any snapshot could be captured")
+        # quarantine: the breaker stretches the probation window after K
+        # consecutive faulted rounds.
+        window = (self.probation_rounds if consec >= self.breaker_k
+                  else 1)
+        self.engines[e] = None
+        self._pending_restore[e] = (SNAP.strip_for_restart(snap),
+                                    self._round + window)
+        self._set_quarantine_gauge()
+        self.quarantine_log.append(
+            {"engine": e, "round": self._round, "consecutive": consec,
+             "probation_rounds": window, "reason": reason})
+        self._transition(
+            "engine", "active", "quarantined",
+            {"engine": e, "round": self._round, "consecutive": consec,
+             "probation_rounds": window, "reason": reason[:200]})
+        # salvage + migrate: finished requests are terminal at the fleet;
+        # in-flight (slot order) then queued requests move to the least
+        # loaded healthy replica's queue head. Ages are rebased exactly
+        # like Engine.restore does, so deadlines keep measuring elapsed
+        # age across the move.
+        shift = float(self.clock()) - snap.clock_now
+        self._terminal.extend(
+            SNAP._req_from_dict(d, shift) for d in snap.finished)
+        inflight = [SNAP._req_from_dict(d, shift)
+                    for d in snap.slot_req if d is not None]
+        queued = [SNAP._req_from_dict(d, shift) for d in snap.queue]
+        for r in inflight:
+            r.replays += 1
+        moved = inflight + queued
+        for r in moved:
+            r.status = "queued"
+            r.done = False
+        live = self._live()
+        if not live:
+            # no healthy peer to take the work: restore THIS replica now
+            # (probation waived — liveness beats hygiene) and migrate to
+            # it.
+            self._restore_engine(e)
+            live = [e]
+        target = min(live, key=lambda t: (
+            self._outstanding_tiles(self.engines[t]), t))
+        self.engines[target].queue[0:0] = moved
+        self._inc("fleet_failovers_total", engine=e)
+        self._inc("fleet_requests_migrated_total", len(moved), engine=e)
+        self._transition(
+            "route", "primary", "failover",
+            {"engine": e, "target": target, "round": self._round,
+             "migrated": len(moved), "reason": reason[:200]})
+        self._shed_fleet_overload()
+
+    def _restore_due(self, force: bool = False):
+        for e in sorted(self._pending_restore):
+            if force or self._round >= self._pending_restore[e][1]:
+                self._restore_engine(e)
+                force = False  # liveness needs ONE replica back, not all
+
+    def _restore_engine(self, e: int):
+        snap, _release = self._pending_restore.pop(e)
+        self.engines[e] = SNAP.restore(
+            snap, params=self.params, fault_plan=self._plans[e],
+            clock=self.clock, escalate_step_errors=True)
+        self._set_quarantine_gauge()
+        self._inc("fleet_engine_restores_total", engine=e)
+        self._transition(
+            "engine", "quarantined", "restored",
+            {"engine": e, "round": self._round,
+             "reason": "probation_elapsed"})
+
+    # -- results -------------------------------------------------------------
+    def results(self) -> Dict[int, List[int]]:
+        res = {r.uid: list(r.out) for r in self._terminal}
+        for eng in self.engines:
+            if eng is not None:
+                res.update({r.uid: r.out for r in eng.finished})
+        return res
+
+    def report(self) -> Dict[int, dict]:
+        """Per-request lifecycle report across the whole fleet: every
+        submitted request appears exactly once, with the engine currently
+        holding it (None for fleet-held terminal requests)."""
+        rep: Dict[int, dict] = {}
+        for r in self._terminal:
+            rep[r.uid] = {"status": r.status, "tokens": len(r.out),
+                          "replays": r.replays, "error": r.error,
+                          "engine": None}
+        for e, eng in enumerate(self.engines):
+            if eng is None:
+                continue
+            for uid, entry in eng.report().items():
+                assert uid not in rep, (
+                    f"request {uid} reported by engine {e} AND the fleet "
+                    f"terminal set — failover double-accounted it")
+                rep[uid] = dict(entry, engine=e)
+        return rep

@@ -1,0 +1,272 @@
+"""Fleet tests: tile-cost routing, deterministic failover, circuit
+breaker, fleet-wide backpressure.
+
+The load-bearing property, repeated across the fault matrix in BOTH step
+modes: a fleet where a seeded FaultPlan kills one replica mid-round
+produces final per-request token streams IDENTICAL to a fault-free
+single-engine run, and every request ends in exactly one terminal status
+in Fleet.report().
+"""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry as REG
+from repro.models import model as MD
+from repro.obs import schema as SCH
+from repro.obs import sinks as SK
+from repro.resilience import faults as F
+from repro.serve.engine import Engine
+from repro.serve.fleet import Fleet
+
+TERMINAL = {"done", "shed", "deadline_miss", "failed"}
+
+PROMPTS = [np.array([3, 1, 4, 1], np.int32),
+           np.array([2, 7, 1], np.int32),
+           np.array([9, 8, 2, 6, 5], np.int32),
+           np.array([5, 5, 2], np.int32)]
+MAX_NEW = 3
+
+# Each fault kind as an ENGINE KILLER, scoped to replica 0: persistent
+# strikes exhaust the ladder (launch_error / admit_oom), the poison
+# guard escalates, and the straggler outlasts the heartbeat budget.
+KILLS = {
+    "launch_error": F.Fault("launch_error", "decode", 1, times=99,
+                            engine=0),
+    "admit_oom": F.Fault("admit_oom", "admit", 0, times=99, engine=0),
+    "poison": F.Fault("poison", "decode", 1, times=1, engine=0),
+    "straggler": F.Fault("straggler", "decode", 1, times=1, delay_s=10.0,
+                         engine=0),
+}
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    cfg = REG.smoke_config("yi-9b")
+    params = MD.init_params(jax.random.key(0), cfg)
+
+    eng = Engine(params, cfg, slots=2, max_len=32, temperature=0.0,
+                 prefill_block=4, clock=F.VirtualClock())
+    for uid, p in enumerate(PROMPTS):
+        eng.submit(p, max_new=MAX_NEW, uid=uid)
+    baseline = eng.run()
+
+    def make(plan=None, submit=True, **kw):
+        engine_kw = dict(slots=2, max_len=32, temperature=0.0,
+                         prefill_block=4)
+        engine_kw.update(kw.pop("engine_kw", {}))
+        kw.setdefault("heartbeat_timeout_s", 5.0)
+        kw.setdefault("snapshot_every", 2)
+        fleet = Fleet(params, cfg, engines=2, fault_plan=plan,
+                      engine_kw=engine_kw, **kw)
+        if submit:
+            for uid, p in enumerate(PROMPTS):
+                fleet.submit(p, max_new=MAX_NEW, uid=uid)
+        return fleet
+
+    return {"cfg": cfg, "params": params, "make": make,
+            "baseline": baseline}
+
+
+def _check_fleet_contract(fleet, res, baseline, uids):
+    """Termination + exactly-one-terminal-status + token identity."""
+    rep = fleet.report()
+    assert set(rep) == set(uids), "request lost or double-reported"
+    assert all(r["status"] in TERMINAL for r in rep.values()), rep
+    for uid in uids:
+        if rep[uid]["status"] == "done":
+            assert res[uid] == baseline[uid % len(PROMPTS)], (
+                uid, res[uid], baseline[uid % len(PROMPTS)])
+    return rep
+
+
+# ---------------------------------------------------------------------------
+# the failover property: each kill kind x step mode -> token identity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", sorted(KILLS))
+@pytest.mark.parametrize("step_mode", ["split", "fused"])
+def test_failover_token_identity(ctx, kind, step_mode):
+    fleet = ctx["make"](plan=F.FaultPlan([KILLS[kind]]),
+                        engine_kw=dict(step_mode=step_mode))
+    res = fleet.run(max_steps=200)
+    rep = _check_fleet_contract(fleet, res, ctx["baseline"],
+                                range(len(PROMPTS)))
+    # the kill really happened, everyone still finished identically
+    assert all(r["status"] == "done" for r in rep.values()), rep
+    st = fleet.stats
+    assert st["fleet_failovers_total"] >= 1, st
+    assert st["fleet_requests_migrated_total"] >= 1, st
+    assert st["fleet_engine_restores_total"] >= 1, st
+    assert st["engines_quarantined"] == 0  # probation fully drained
+
+
+def test_failover_report_marks_migration(ctx):
+    """Migrated in-flight requests carry a replay count and land on the
+    surviving engine in the report."""
+    fleet = ctx["make"](plan=F.FaultPlan([KILLS["launch_error"]]))
+    res = fleet.run(max_steps=200)
+    rep = _check_fleet_contract(fleet, res, ctx["baseline"],
+                                range(len(PROMPTS)))
+    assert sum(r["replays"] for r in rep.values()) >= 1, rep
+    engines = {r["engine"] for r in rep.values()}
+    assert engines <= {0, 1, None}
+
+
+# ---------------------------------------------------------------------------
+# routing
+# ---------------------------------------------------------------------------
+
+
+def test_routing_balances_by_tiles(ctx):
+    """Greedy least-loaded routing on the tri(n) cost model: with every
+    request submitted up front, per-replica routed-tile totals stay
+    within one maximal request of each other, and both replicas work."""
+    fleet = ctx["make"](submit=False)
+    long = np.arange(1, 17, dtype=np.int32)  # tri(4) = 10 tiles
+    prompts = [long if i % 4 == 0 else PROMPTS[i % len(PROMPTS)]
+               for i in range(8)]
+    for uid, p in enumerate(prompts):
+        fleet.submit(p, max_new=MAX_NEW, uid=uid)
+    tiles = {e: fleet.registry.counter_value(
+        "fleet_routed_tiles_total", {"engine": str(e)})
+        for e in range(2)}
+    routed = {e: fleet.registry.counter_value(
+        "fleet_requests_routed_total", {"engine": str(e)})
+        for e in range(2)}
+    assert all(v >= 1 for v in routed.values()), routed
+    max_item = max(
+        fleet.engines[0]._prefill_tiles(r)
+        for eng in fleet.engines for r in eng.queue)
+    assert abs(tiles[0] - tiles[1]) <= max_item, (tiles, max_item)
+    res = fleet.run()
+    rep = fleet.report()
+    assert set(rep) == set(range(8))
+    assert all(r["status"] == "done" for r in rep.values()), rep
+    for uid in range(8):
+        if uid % 4 == 0:  # the long prompt has no PROMPTS baseline
+            assert len(res[uid]) == MAX_NEW
+        else:
+            assert res[uid] == ctx["baseline"][uid % len(PROMPTS)]
+
+
+def test_fleet_backpressure_never_sheds_heads(ctx):
+    """Global tile budget: overload sheds the heaviest non-head request
+    across the fleet; every replica's queue head survives."""
+    fleet = ctx["make"](submit=False, max_fleet_tiles=4)
+    for uid, p in enumerate(PROMPTS * 2):
+        fleet.submit(p, max_new=MAX_NEW, uid=uid)
+    shed_now = [r.uid for r in fleet._terminal if r.status == "shed"]
+    assert shed_now, "budget of 4 tiles must shed something"
+    heads = {eng.queue[0].uid for eng in fleet.engines if eng.queue}
+    assert not (set(shed_now) & heads)
+    res = fleet.run()
+    rep = _check_fleet_contract(fleet, res, ctx["baseline"], range(8))
+    shed = [u for u, r in rep.items() if r["status"] == "shed"]
+    assert shed and fleet.stats["fleet_requests_shed_total"] == len(shed)
+    assert all(res[u] == [] for u in shed)
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker + probation
+# ---------------------------------------------------------------------------
+
+
+def test_circuit_breaker_stretches_probation(ctx):
+    """First fault: a 1-round probation. A second CONSECUTIVE fault (no
+    successful working round between) trips the breaker: the replica is
+    parked for the full probation window, then drained back in."""
+    plan = F.FaultPlan([
+        F.Fault("launch_error", "decode", 1, times=99, engine=0),
+        F.Fault("launch_error", "decode", 2, times=99, engine=0)])
+    fleet = ctx["make"](plan=plan, breaker_k=2, probation_rounds=6)
+    for _ in range(50):  # drive until the first restoration
+        fleet.tick()
+        if fleet.stats["fleet_engine_restores_total"] >= 1:
+            break
+    assert fleet.stats["fleet_engine_restores_total"] >= 1
+    # a second wave routes to the (idle, restored) replica 0, whose next
+    # decode round index is 2 — straight into the second kill
+    for uid, p in enumerate(PROMPTS, start=len(PROMPTS)):
+        fleet.submit(p, max_new=MAX_NEW, uid=uid)
+    res = fleet.run(max_steps=300)
+    rep = _check_fleet_contract(fleet, res, ctx["baseline"], range(8))
+    assert all(r["status"] == "done" for r in rep.values()), rep
+    st = fleet.stats
+    assert st["fleet_failovers_total"] == 2, st
+    windows = [q["probation_rounds"] for q in fleet.quarantine_log]
+    assert windows == [1, 6], fleet.quarantine_log
+    assert [q["consecutive"] for q in fleet.quarantine_log] == [1, 2]
+    assert st["fleet_engine_restores_total"] == 2
+    assert st["engines_quarantined"] == 0  # drained back in
+
+
+def test_every_replica_dead_self_restores(ctx):
+    """An engine-agnostic kill (engine=-1) takes down EVERY replica; the
+    fleet must immediately restore one (liveness beats probation) and
+    still finish token-identically."""
+    plan = F.FaultPlan(
+        [F.Fault("launch_error", "decode", 1, times=99, engine=-1)])
+    fleet = ctx["make"](plan=plan)
+    res = fleet.run(max_steps=300)
+    rep = _check_fleet_contract(fleet, res, ctx["baseline"],
+                                range(len(PROMPTS)))
+    assert all(r["status"] == "done" for r in rep.values()), rep
+    assert fleet.stats["fleet_failovers_total"] >= 2
+
+
+# ---------------------------------------------------------------------------
+# trace events
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_events_schema_valid(ctx, tmp_path):
+    trace_path = SK.enable(trace_dir=str(tmp_path), metrics_path=None,
+                           run_id="test-fleet")
+    try:
+        fleet = ctx["make"](plan=F.FaultPlan([KILLS["launch_error"]]))
+        res = fleet.run(max_steps=200)
+    finally:
+        SK.disable()
+    assert all(res[u] == ctx["baseline"][u] for u in ctx["baseline"])
+    kinds = {"failover": 0, "engine_quarantine": 0, "rebalance": 0}
+    with open(trace_path, encoding="utf-8") as fh:
+        for line in fh:
+            ev = json.loads(line)
+            if ev.get("type") not in kinds:
+                continue
+            kinds[ev["type"]] += 1
+            assert SCH.validate_event(ev) == [], ev
+    assert all(v >= 1 for v in kinds.values()), kinds
+
+
+def test_fleet_counters_integral_in_metrics():
+    doc = {"schema": SK.SCHEMA_VERSION, "kind": "metrics",
+           "created_unix": 0.0,
+           "counters": {"fleet_failovers_total": 1.5},
+           "gauges": {"engines_quarantined": 0.5}, "histograms": {}}
+    errs = SCH.validate_metrics(doc)
+    assert any("fleet counter" in e for e in errs)
+    assert any("fleet gauge" in e for e in errs)
+    doc["counters"]["fleet_failovers_total"] = 1
+    doc["gauges"]["engines_quarantined"] = 1
+    assert SCH.validate_metrics(doc) == []
+
+
+def test_fault_plan_engine_scoping():
+    """for_engine keeps engine-scoped faults apart and gives each
+    sub-plan independent strike bookkeeping."""
+    plan = F.FaultPlan([
+        F.Fault("launch_error", "decode", 0, times=1, engine=0),
+        F.Fault("launch_error", "decode", 1, times=1, engine=-1)])
+    p0, p1 = plan.for_engine(0), plan.for_engine(1)
+    assert len(p0.faults) == 2 and len(p1.faults) == 1
+    with pytest.raises(F.InjectedLaunchError):
+        p0.maybe_fail("decode", 0)
+    p0.maybe_fail("decode", 0)  # strike spent on THIS sub-plan
+    with pytest.raises(F.InjectedLaunchError):
+        p1.maybe_fail("decode", 1)  # p1's own bookkeeping untouched

@@ -7,6 +7,7 @@ exactly one explicit terminal status (no silent drops), and every request
 that completes is token-identical to the fault-free run (greedy decode).
 """
 
+import dataclasses
 import json
 
 import jax
@@ -406,3 +407,116 @@ def test_resilience_counters_integral_in_metrics():
     assert any("integral" in e for e in SCH.validate_metrics(doc))
     doc["counters"]["requests_shed_total"] = 2
     assert SCH.validate_metrics(doc) == []
+
+
+# ---------------------------------------------------------------------------
+# fused-mode snapshots (the PR 9 seam: step_mode + packing templates)
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_captures_fused_packing_state(ctx, tmp_path):
+    """A fused engine's snapshot carries step_mode and the length-bucketed
+    packing templates it has compiled, through the file format too, so a
+    restored replica re-serves without re-paying those compiles."""
+    eng = ctx["make"](step_mode="fused")
+    eng.round()
+    eng.round()
+    assert eng.fused_templates, "two fused rounds must record a template"
+    snap = SNAP.snapshot(eng)
+    assert snap.step_mode == "fused"
+    assert {(tuple(t), c) for t, c in snap.fused_templates} == \
+        eng.fused_templates
+    loaded = SNAP.from_dir(SNAP.to_dir(snap, str(tmp_path / "snap")))
+    assert loaded.step_mode == "fused"
+    assert loaded.fused_templates == snap.fused_templates
+    assert loaded.mode_cost == snap.mode_cost
+    restored = Engine.restore(loaded)
+    assert restored.step_mode == "fused"
+    assert restored.fused_templates == eng.fused_templates
+    assert restored.run() == ctx["baseline"]
+
+
+@settings(max_examples=4, deadline=None)
+@given(cut=st.integers(min_value=0, max_value=5))
+def test_snapshot_fused_any_cut_point(ctx, cut):
+    """Property: a fused engine snapshotted after ANY number of mixed
+    packed rounds restores token-identically (greedy fused == split)."""
+    eng = ctx["make"](step_mode="fused")
+    for _ in range(cut + 1):
+        eng.round()
+    resumed = Engine.restore(SNAP.snapshot(eng)).run()
+    assert resumed == ctx["baseline"]
+
+
+def test_snapshot_step_mode_drift_rejected(ctx):
+    """Restoring a snapshot into an engine whose recorded kwargs resolve
+    to a DIFFERENT step mode is config drift, not resumption — refuse."""
+    eng = ctx["make"](step_mode="fused")
+    eng.round()
+    bad = dataclasses.replace(SNAP.snapshot(eng), step_mode="split")
+    with pytest.raises(ValueError, match="step_mode"):
+        Engine.restore(bad)
+
+
+def test_snapshot_mode_cost_roundtrips(ctx, tmp_path):
+    """The decode auto-mode cost table survives snapshot -> file ->
+    restore, so a restored engine keeps its measured crossover."""
+    eng = ctx["make"](decode_mode="auto")
+    eng._expire_deadlines()
+    eng._admit()
+    eng.step()
+    eng.step()
+    snap = SNAP.snapshot(eng)
+    loaded = SNAP.from_dir(SNAP.to_dir(snap, str(tmp_path / "snap")))
+    assert loaded.mode_cost == snap.mode_cost
+    restored = Engine.restore(loaded)
+    assert dict(restored._mode_cost) == dict(eng._mode_cost)
+    assert restored.run() == ctx["baseline"]
+
+
+# ---------------------------------------------------------------------------
+# health edges
+# ---------------------------------------------------------------------------
+
+
+def test_roundwatch_median_partial_window():
+    """median() on a partially filled window: None when empty, upper
+    median of what has actually been observed otherwise."""
+    w = H.RoundWatch(factor=3.0, window=64, min_samples=5)
+    assert w.median() is None
+    w.observe(3.0)
+    assert w.median() == 3.0
+    w.observe(1.0)
+    assert w.median() == 3.0  # sorted([1,3])[1] — upper median
+    w.observe(2.0)
+    assert w.median() == 2.0
+
+
+def test_roundwatch_needs_min_samples_before_flagging():
+    """The min_samples gate counts PRIOR history: the flag decision for a
+    round never includes that round's own duration in the median."""
+    w = H.RoundWatch(factor=3.0, window=64, min_samples=2)
+    assert not w.observe(0.01)  # no history at all
+    assert not w.observe(1.0)   # 1 sample < min_samples: cold start
+    assert w.observe(10.0)      # 2 samples, median 1.0, 10 > 3*1.0
+    assert w.flagged == 1
+
+
+def test_heartbeat_exactly_at_timeout_not_failed():
+    """failed() is strict: a beat aged EXACTLY timeout_s is still alive;
+    one instant past it is not."""
+    mon = H.HeartbeatMonitor([0], timeout_s=5.0)
+    assert mon.failed(now=100.0) == set()  # never beat: not failed
+    mon.beat(0, step=0, now=0.0)
+    assert mon.failed(now=5.0) == set()
+    assert mon.failed(now=5.0 + 1e-9) == {0}
+
+
+def test_heartbeat_recovers_after_failure():
+    mon = H.HeartbeatMonitor([0, 1], timeout_s=5.0)
+    mon.beat(0, step=0, now=0.0)
+    mon.beat(1, step=0, now=0.0)
+    assert mon.failed(now=10.0) == {0, 1}
+    mon.beat(0, step=1, now=10.0)
+    assert mon.failed(now=10.0) == {1}  # 0 recovered, 1 still dead
+    assert mon.failed(now=30.0) == {0, 1}
